@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table (+ throughput, accuracy).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table6     # one table
+
+CSV rows: ``name,us_per_call,derived``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks import accuracy, pencil_overlap, table1_resources, table2_resources
+from benchmarks import table5_utilization, table6_delay, throughput
+
+ALL = {
+    "table1": table1_resources.run,
+    "table2": table2_resources.run,
+    "table5": table5_utilization.run,
+    "table6": table6_delay.run,
+    "throughput": throughput.run,
+    "accuracy": accuracy.run,
+    "pencil_overlap": pencil_overlap.run,
+}
+
+
+def main() -> None:
+    picks = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in picks:
+        ALL[name]()
+
+
+if __name__ == "__main__":
+    main()

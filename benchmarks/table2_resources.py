@@ -1,0 +1,24 @@
+"""Paper Table 2: 1D FFT engine resource counts (N/2 vs N/2·log2 N)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.fft1d import butterfly_counts
+
+
+def run():
+    print("# Table 2: 1D FFT resources")
+    for n in (8, 64, 256, 1024, 4096):
+        p = butterfly_counts(n, proposed=True)
+        t = butterfly_counts(n, proposed=False)
+        emit(
+            f"table2_1dfft_N{n}",
+            0.0,
+            f"BU {p['butterfly_units']} vs {t['butterfly_units']}; "
+            f"add {p['adders_subtractors']} vs {t['adders_subtractors']}; "
+            f"stages reused {p['stages']}x",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,9 @@
+from repro.checkpoint.store import (
+    latest_step,
+    restore,
+    restore_resharded,
+    save,
+    AsyncCheckpointer,
+)
+
+__all__ = ["save", "restore", "restore_resharded", "latest_step", "AsyncCheckpointer"]

@@ -1,0 +1,129 @@
+"""Fault-tolerant checkpointing: sharded npz + manifest, atomic rename,
+async background writes, and elastic restore (re-shard onto a different mesh).
+
+Layout:
+  <dir>/step_<N>.tmp/ ... -> atomic rename -> <dir>/step_<N>/
+      manifest.json       {step, leaf paths, shapes, dtypes, config_hash}
+      arrays.npz          flat {path_i: array}
+A partially-written checkpoint can never be picked up: ``latest_step`` only
+sees fully-renamed directories.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _paths(tree):
+    return [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+
+
+def config_hash(cfg) -> str:
+    return hashlib.sha256(repr(cfg).encode()).hexdigest()[:16]
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None) -> str:
+    """Atomic checkpoint write. Returns the final directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, _ = _flatten(tree)
+    paths = _paths(tree)
+    arrays = {f"a{i}": np.asarray(jax.device_get(l)) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_", 1)[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (values replaced)."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        leaves = [data[f"a{i}"] for i in range(len(data.files))]
+    like_leaves, treedef = _flatten(like)
+    if len(leaves) != len(like_leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, expected {len(like_leaves)}"
+        )
+    out = [
+        jnp.asarray(a, dtype=l.dtype) if hasattr(l, "dtype") else jnp.asarray(a)
+        for a, l in zip(leaves, like_leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def restore_resharded(ckpt_dir: str, step: int, like: Any, shardings: Any) -> Any:
+    """Elastic restore: place restored host arrays with NEW shardings — this
+    is how a run resumes on a different mesh (grown/shrunk data axis)."""
+    tree = restore(ckpt_dir, step, like)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, s) if s is not None else a, tree, shardings
+    )
+
+
+class AsyncCheckpointer:
+    """Background-thread writer so the train loop never blocks on disk."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: threading.Thread | None = None
+        self.last_saved: int | None = None
+
+    def save_async(self, step: int, tree: Any, extra: dict | None = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+
+        def _work():
+            save(self.ckpt_dir, step, host_tree, extra)
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=_work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,19 @@
+"""Assigned architecture registry (``--arch <id>``)."""
+
+from repro.configs.registry import (
+    ARCH_IDS,
+    SHAPES,
+    get_config,
+    input_specs,
+    shape_skips,
+    smoke_config,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "get_config",
+    "input_specs",
+    "shape_skips",
+    "smoke_config",
+]

@@ -1,0 +1,27 @@
+"""Core: the paper's area-efficient FFT engine and its applications."""
+
+from repro.core.fft1d import (
+    bit_reversal_permutation,
+    butterfly_counts,
+    fft,
+    fft_routing_tables,
+    ifft,
+)
+from repro.core.fft2d import fft2, fft2_stream, fftshift2, ifft2
+from repro.core.spectral import fftconv, fourier_mixing, log_mel, stft
+
+__all__ = [
+    "bit_reversal_permutation",
+    "butterfly_counts",
+    "fft",
+    "fft_routing_tables",
+    "ifft",
+    "fft2",
+    "fft2_stream",
+    "fftshift2",
+    "ifft2",
+    "fftconv",
+    "fourier_mixing",
+    "log_mel",
+    "stft",
+]

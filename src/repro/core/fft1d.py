@@ -1,0 +1,220 @@
+"""Iterative radix-2 FFT with butterfly-unit reuse (the paper's 1D engine).
+
+The paper's 1D FFT processor instantiates only N/2 butterfly units and reuses
+them for log2(N) stages, steered by a control unit (Stage Bus), a routing
+network (stage-dependent shuffle) and a register array (feedback path).
+
+JAX mapping (see DESIGN.md §2):
+
+  * ``variant="looped"``   — paper-faithful: one stage body inside
+    ``lax.fori_loop``; the induction variable is the Stage Bus, per-stage
+    routing/twiddle tables are the routing network + twiddle ROM, and the loop
+    carry is the register array.
+  * ``variant="unrolled"`` — the "array architecture" baseline the paper
+    compares against: log2(N) stage bodies laid out in space (XLA sees
+    log2(N) separate stage computations).
+  * ``variant="stockham"`` — beyond-paper optimized variant: Stockham
+    autosort (no bit-reversal gather, contiguous reshapes only) — the
+    TPU-friendliest access pattern; used by the optimized kernels.
+
+All variants compute the same DFT and are tested against each other and a
+float64 DFT oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Variant = Literal["looped", "unrolled", "stockham"]
+
+__all__ = [
+    "fft",
+    "ifft",
+    "fft_routing_tables",
+    "bit_reversal_permutation",
+    "butterfly_counts",
+]
+
+
+def _check_pow2(n: int) -> int:
+    if n < 2 or (n & (n - 1)) != 0:
+        raise ValueError(f"radix-2 FFT needs a power-of-two length, got {n}")
+    return int(math.log2(n))
+
+
+@functools.lru_cache(maxsize=64)
+def bit_reversal_permutation(n: int) -> np.ndarray:
+    """Index permutation that bit-reverses ``n`` positions (DIT input order)."""
+    bits = _check_pow2(n)
+    idx = np.arange(n, dtype=np.int64)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+@functools.lru_cache(maxsize=64)
+def fft_routing_tables(n: int):
+    """Per-stage routing network + twiddle ROM for the looped engine.
+
+    Returns numpy arrays, all indexed by stage ``s`` (the Stage Bus value):
+      idx_a   (L, N/2) int32 — "odd"/top input index of each butterfly unit
+      idx_b   (L, N/2) int32 — "even"/bottom input index (= idx_a + half)
+      twiddle (L, N/2) c64   — W_m^p per butterfly unit
+      unperm  (L, N)   int32 — inverse shuffle: position i of the stage output
+                               gathers from concat([top_out, bot_out])[unperm[i]]
+
+    The paper's routing network shuffles register-array contents per stage as
+    a function of SB; these tables are that shuffle, precomputed.
+    """
+    stages = _check_pow2(n)
+    half_n = n // 2
+    idx_a = np.zeros((stages, half_n), dtype=np.int32)
+    idx_b = np.zeros((stages, half_n), dtype=np.int32)
+    twiddle = np.zeros((stages, half_n), dtype=np.complex64)
+    unperm = np.zeros((stages, n), dtype=np.int32)
+    for s in range(stages):
+        half = 1 << s          # butterfly span within a block
+        m = half * 2           # block size at this stage
+        j = 0
+        pos_of = np.zeros(n, dtype=np.int32)
+        for blk in range(0, n, m):
+            for p in range(half):
+                a = blk + p
+                b = a + half
+                idx_a[s, j] = a
+                idx_b[s, j] = b
+                twiddle[s, j] = np.exp(-2j * np.pi * p / m).astype(np.complex64)
+                pos_of[a] = j           # top output j lives at position a
+                pos_of[b] = half_n + j  # bottom output j lives at position b
+                j += 1
+        unperm[s] = pos_of
+    return idx_a, idx_b, twiddle, unperm
+
+
+def butterfly_counts(n: int, proposed: bool) -> dict:
+    """Analytic resource counts from the paper (Tables 1 & 2), 1D engine."""
+    stages = _check_pow2(n)
+    bu = n // 2 if proposed else (n // 2) * stages
+    return {
+        "butterfly_units": bu,
+        "multipliers": bu,
+        "adders_subtractors": 2 * bu,
+        "stages": stages,
+    }
+
+
+def _stage_tables_device(n: int):
+    idx_a, idx_b, tw, unperm = fft_routing_tables(n)
+    return (
+        jnp.asarray(idx_a),
+        jnp.asarray(idx_b),
+        jnp.asarray(tw),
+        jnp.asarray(unperm),
+    )
+
+
+def _butterfly_stage(x, idx_a, idx_b, tw):
+    """One pass through the N/2 butterfly units (paper fig. 6a).
+
+    top = A + W·B ; bot = A − W·B, computed for all N/2 units at once.
+    """
+    a = jnp.take(x, idx_a, axis=-1)
+    b = jnp.take(x, idx_b, axis=-1) * tw
+    return a + b, a - b
+
+
+def _fft_looped(x: jax.Array, n: int) -> jax.Array:
+    """Paper-faithful engine: N/2 butterflies reused log2(N) times.
+
+    fori_loop induction variable == Stage Bus; carry == register array.
+    """
+    stages = _check_pow2(n)
+    idx_a, idx_b, tw, unperm = _stage_tables_device(n)
+    x = jnp.take(x, jnp.asarray(bit_reversal_permutation(n)), axis=-1)
+
+    def stage_body(s, regs):
+        top, bot = _butterfly_stage(regs, idx_a[s], idx_b[s], tw[s])
+        merged = jnp.concatenate([top, bot], axis=-1)
+        return jnp.take(merged, unperm[s], axis=-1)
+
+    return jax.lax.fori_loop(0, stages, stage_body, x)
+
+
+def _fft_unrolled(x: jax.Array, n: int) -> jax.Array:
+    """Array-architecture baseline: stages laid out in space (Python loop)."""
+    stages = _check_pow2(n)
+    idx_a, idx_b, tw, unperm = _stage_tables_device(n)
+    x = jnp.take(x, jnp.asarray(bit_reversal_permutation(n)), axis=-1)
+    for s in range(stages):
+        top, bot = _butterfly_stage(x, idx_a[s], idx_b[s], tw[s])
+        merged = jnp.concatenate([top, bot], axis=-1)
+        x = jnp.take(merged, unperm[s], axis=-1)
+    return x
+
+
+@functools.lru_cache(maxsize=64)
+def _stockham_twiddles(n: int):
+    """Per-stage twiddles for the Stockham autosort schedule."""
+    stages = _check_pow2(n)
+    out = []
+    for s in range(stages):
+        l = 1 << s  # current transform length of each sub-FFT
+        k = np.arange(l, dtype=np.float64)
+        out.append(np.exp(-2j * np.pi * k / (2 * l)).astype(np.complex64))
+    return tuple(out)
+
+
+def _fft_stockham(x: jax.Array, n: int) -> jax.Array:
+    """Stockham autosort: no bit-reversal, contiguous strides (TPU-friendly)."""
+    stages = _check_pow2(n)
+    tws = _stockham_twiddles(n)
+    batch = x.shape[:-1]
+    # y has shape (..., r, l): r sub-FFTs each of length l = n/r.
+    y = x.reshape(*batch, n, 1)
+    for s in range(stages):
+        l = 1 << s
+        r = n >> (s + 1)  # half the current number of sub-sequences
+        tw = jnp.asarray(tws[s])  # (l,)
+        y = y.reshape(*batch, 2, r, l)
+        a = y[..., 0, :, :]
+        b = y[..., 1, :, :] * tw
+        y = jnp.concatenate([a + b, a - b], axis=-1)  # (..., r, 2l)
+    return y.reshape(*batch, n)
+
+
+def fft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
+    """Radix-2 FFT along ``axis``. Input real or complex; returns complex64."""
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    elif x.dtype != jnp.complex64:
+        x = x.astype(jnp.complex64)
+    axis = axis % x.ndim
+    if axis != x.ndim - 1:
+        x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    if variant == "looped":
+        y = _fft_looped(x, n)
+    elif variant == "unrolled":
+        y = _fft_unrolled(x, n)
+    elif variant == "stockham":
+        y = _fft_stockham(x, n)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    if axis != x.ndim - 1:
+        y = jnp.moveaxis(y, -1, axis)
+    return y
+
+
+def ifft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
+    """Inverse FFT via the conjugation identity (shares the forward engine)."""
+    x = jnp.asarray(x).astype(jnp.complex64)
+    n = x.shape[axis % x.ndim]
+    return jnp.conj(fft(jnp.conj(x), axis=axis, variant=variant)) / n

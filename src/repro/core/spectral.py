@@ -1,0 +1,154 @@
+"""LM-facing applications of the paper's FFT engine.
+
+* ``fourier_mixing`` — FNet-style token mixing: Re(FFT2(x)) over (seq, d).
+  FNet's mixing sublayer *is* a 2D Fourier transform, so the paper's
+  area-efficient 2D engine drops in as the mixing layer of a trainable LM
+  (``configs/fourier_lm.py``, the paper's technique as an LM architecture).
+* ``fftconv`` — long convolution via the engine (Hyena-style), the opt-in
+  spectral primitive offered to the SSM/hybrid archs.
+* ``stft`` / ``log_mel`` — a real spectrogram frontend for the audio arch
+  (the assignment mandates a stub frontend; this is the optional real one,
+  and it is itself a direct application of the paper: a streamed bank of
+  1D FFTs).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fft1d import Variant, fft, ifft
+from repro.core.fft2d import fft2
+
+__all__ = ["fourier_mixing", "fftconv", "stft", "log_mel"]
+
+
+def fourier_mixing(x: jax.Array, variant: str = "looped") -> jax.Array:
+    """FNet mixing sublayer: real part of the 2D FFT over (seq, hidden).
+
+    x: (..., seq, d) real. Both dims must be powers of two (pad upstream).
+    variant="rfft" uses the real-input specialisation (beyond-paper
+    optimization, §Perf cell C): ~2× fewer FLOPs/bytes via conjugate
+    symmetry.
+    """
+    if variant == "rfft":
+        return fourier_mixing_rfft(x)
+    return jnp.real(fft2(x.astype(jnp.complex64), variant=variant)).astype(x.dtype)
+
+
+def rfft_last_axis(x: jax.Array, variant: Variant = "stockham") -> jax.Array:
+    """Real-input FFT along the last axis via the packed half-length trick:
+    one complex FFT of length D/2 + O(D) untangling, instead of length D.
+    Returns the non-redundant half spectrum (..., D//2 + 1)."""
+    d = x.shape[-1]
+    m = d // 2
+    z = x[..., 0::2] + 1j * x[..., 1::2]          # (..., M) complex
+    zf = fft(z.astype(jnp.complex64), variant=variant)
+    k = jnp.arange(m + 1)
+    zk = jnp.take(zf, k % m, axis=-1)             # Z[k], k = 0..M (Z[M]=Z[0])
+    zmk = jnp.conj(jnp.take(zf, (-k) % m, axis=-1))
+    xe = 0.5 * (zk + zmk)                         # FFT of even samples
+    xo = -0.5j * (zk - zmk)                       # FFT of odd samples
+    w = jnp.exp(-2j * jnp.pi * k / d).astype(jnp.complex64)
+    return xe + w * xo
+
+
+def fourier_mixing_rfft(x: jax.Array, variant: Variant = "stockham") -> jax.Array:
+    """Re(FFT_seq(FFT_d(x))) for real x, computing only the non-redundant
+    half of the d-spectrum and mirroring the real part back:
+
+      Re(Y)[s, k] = Re(Y)[(S−s) mod S, D−k]   for k > D/2
+    """
+    s, d = x.shape[-2], x.shape[-1]
+    xh = rfft_last_axis(x, variant=variant)        # (..., S, D/2+1)
+    yh = fft(xh, axis=-2, variant=variant)         # seq-axis complex FFT
+    re = jnp.real(yh)
+    s_mirror = (-jnp.arange(s)) % s
+    tail_k = jnp.arange(d // 2 - 1, 0, -1)         # D−k for k = D/2+1 .. D−1
+    tail = jnp.take(jnp.take(re, s_mirror, axis=-2), tail_k, axis=-1)
+    return jnp.concatenate([re, tail], axis=-1).astype(x.dtype)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def fftconv(x: jax.Array, kernel: jax.Array, variant: Variant = "looped") -> jax.Array:
+    """Causal long convolution y[t] = sum_s k[s]·x[t−s] via the FFT engine.
+
+    x: (..., seq, d); kernel: (seq_k, d) with seq_k <= seq. O(L log L) versus
+    the O(L²) direct form — the spectral primitive for SSM/hybrid archs.
+    """
+    seq = x.shape[-2]
+    n = _next_pow2(2 * seq)  # zero-pad to avoid circular wrap
+    xt = jnp.swapaxes(x, -1, -2)                      # (..., d, seq)
+    kt = jnp.swapaxes(kernel, -1, -2)                 # (d, seq_k)
+    xf = fft(jnp.pad(xt, [(0, 0)] * (xt.ndim - 1) + [(0, n - seq)]), variant=variant)
+    kf = fft(
+        jnp.pad(kt, [(0, 0)] * (kt.ndim - 1) + [(0, n - kt.shape[-1])]),
+        variant=variant,
+    )
+    y = ifft(xf * kf, variant=variant)[..., :seq]
+    return jnp.swapaxes(jnp.real(y), -1, -2).astype(x.dtype)
+
+
+@functools.lru_cache(maxsize=8)
+def _hann(n: int) -> np.ndarray:
+    return (0.5 - 0.5 * np.cos(2 * np.pi * np.arange(n) / n)).astype(np.float32)
+
+
+def stft(
+    audio: jax.Array,
+    frame: int = 512,
+    hop: int = 256,
+    variant: Variant = "looped",
+) -> jax.Array:
+    """Short-time Fourier transform: (..., T) -> (..., frames, frame//2+1)."""
+    t = audio.shape[-1]
+    n_frames = 1 + (t - frame) // hop
+    idx = np.arange(frame)[None, :] + hop * np.arange(n_frames)[:, None]
+    windows = audio[..., idx] * jnp.asarray(_hann(frame))
+    spec = fft(windows.astype(jnp.complex64), variant=variant)
+    return spec[..., : frame // 2 + 1]
+
+
+@functools.lru_cache(maxsize=8)
+def _mel_filterbank(n_fft_bins: int, n_mels: int, sr: float = 16000.0) -> np.ndarray:
+    """Triangular mel filterbank (slaney-style, simplified)."""
+    def hz_to_mel(f):
+        return 2595.0 * np.log10(1.0 + f / 700.0)
+
+    def mel_to_hz(m):
+        return 700.0 * (10.0 ** (m / 2595.0) - 1.0)
+
+    mel_pts = np.linspace(hz_to_mel(0.0), hz_to_mel(sr / 2), n_mels + 2)
+    hz_pts = mel_to_hz(mel_pts)
+    bins = np.floor((n_fft_bins - 1) * 2 * hz_pts / sr).astype(int)
+    bins = np.clip(bins, 0, n_fft_bins - 1)
+    fb = np.zeros((n_mels, n_fft_bins), dtype=np.float32)
+    for m in range(1, n_mels + 1):
+        lo, c, hi = bins[m - 1], bins[m], bins[m + 1]
+        if c > lo:
+            fb[m - 1, lo:c] = (np.arange(lo, c) - lo) / (c - lo)
+        if hi > c:
+            fb[m - 1, c:hi] = (hi - np.arange(c, hi)) / (hi - c)
+    return fb
+
+
+def log_mel(
+    audio: jax.Array,
+    frame: int = 512,
+    hop: int = 256,
+    n_mels: int = 80,
+    variant: Variant = "looped",
+) -> jax.Array:
+    """Whisper-style log-mel spectrogram built on the paper's engine."""
+    spec = stft(audio, frame=frame, hop=hop, variant=variant)
+    power = jnp.abs(spec) ** 2
+    fb = jnp.asarray(_mel_filterbank(frame // 2 + 1, n_mels))
+    mel = jnp.einsum("...tf,mf->...tm", power, fb)
+    return jnp.log10(jnp.maximum(mel, 1e-10))

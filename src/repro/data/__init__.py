@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, frames_for, make_batch, patches_for
+
+__all__ = ["SyntheticLM", "make_batch", "frames_for", "patches_for"]

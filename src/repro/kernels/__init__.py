@@ -1,0 +1,14 @@
+"""Pallas TPU kernels (validated on CPU via interpret mode)."""
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ops import fft2_kernel, fft_kernel, fft_staged, hbm_traffic_model
+from repro.kernels.slstm_scan import slstm_scan
+
+__all__ = [
+    "fft2_kernel",
+    "fft_kernel",
+    "fft_staged",
+    "flash_attention_fwd",
+    "hbm_traffic_model",
+    "slstm_scan",
+]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas FFT kernels.
+
+Two independent references:
+  * ``dft_matmul`` — O(N²) DFT-matrix product in float64 (ground truth).
+  * ``fft_jnp`` / ``fft2_jnp`` — jnp.fft (XLA's FFT), used for larger sizes.
+Both operate on (re, im) float planes, matching the kernel ABI (TPU Pallas
+has no complex dtype).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=32)
+def _dft_matrix(n: int) -> np.ndarray:
+    k = np.arange(n)
+    return np.exp(-2j * np.pi * np.outer(k, k) / n)  # complex128
+
+
+def dft_matmul(re: jnp.ndarray, im: jnp.ndarray):
+    """Ground-truth DFT along the last axis via explicit matrix product."""
+    w = _dft_matrix(re.shape[-1])
+    x = np.asarray(re, dtype=np.float64) + 1j * np.asarray(im, dtype=np.float64)
+    y = x @ w.T
+    return jnp.asarray(y.real, jnp.float32), jnp.asarray(y.imag, jnp.float32)
+
+
+def fft_jnp(re: jnp.ndarray, im: jnp.ndarray):
+    """XLA FFT oracle along the last axis."""
+    y = jnp.fft.fft(re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64))
+    return jnp.real(y), jnp.imag(y)
+
+
+def fft2_jnp(re: jnp.ndarray, im: jnp.ndarray):
+    """XLA 2D FFT oracle over the last two axes."""
+    y = jnp.fft.fft2(re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64))
+    return jnp.real(y), jnp.imag(y)

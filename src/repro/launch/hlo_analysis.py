@@ -1,0 +1,111 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting per device.
+
+``cost_analysis()`` has no collective information, so we parse the compiled
+module text and sum result-buffer sizes of every collective op, converted to
+estimated per-device link traffic:
+
+  all-reduce          2·S·(g−1)/g      (ring reduce + broadcast)
+  all-gather          S·(g−1)/g        (S = gathered result size)
+  reduce-scatter      S·(g−1)          (S = scattered result size; input = S·g)
+  all-to-all          S·(g−1)/g
+  collective-permute  S                (one hop)
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "c64": 8, "s64": 8, "u64": 8, "f64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes appearing in the result part of an op."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)  # [num_groups, group_size]<=[N]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {op_kind: {count, result_bytes, traffic_bytes}} + totals."""
+    stats: dict = defaultdict(lambda: {"count": 0, "result_bytes": 0, "traffic_bytes": 0})
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.*)", stripped)
+        if not m:
+            continue
+        rest = m.group(1)
+        kind = None
+        for k in _COLLECTIVES:
+            # match the op name, not fused computation names
+            if re.search(rf"\)?\s{re.escape(k)}(-start|-done)?\(", " " + rest) or rest.startswith(k):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done" in rest:
+            continue  # avoid double counting async pairs (count the -start)
+        # result shapes = everything before the op name occurrence
+        idx = rest.find(kind)
+        result_part = rest[:idx]
+        size = _shape_bytes(result_part)
+        g = _group_size(rest)
+        if kind == "all-reduce":
+            traffic = int(2 * size * (g - 1) / max(g, 1))
+        elif kind == "all-gather":
+            traffic = int(size * (g - 1) / max(g, 1))
+        elif kind == "reduce-scatter":
+            traffic = int(size * (g - 1))
+        elif kind == "all-to-all":
+            traffic = int(size * (g - 1) / max(g, 1))
+        else:  # collective-permute
+            traffic = size
+        s = stats[kind]
+        s["count"] += 1
+        s["result_bytes"] += size
+        s["traffic_bytes"] += traffic
+    out = dict(stats)
+    out["total_traffic_bytes"] = sum(v["traffic_bytes"] for v in stats.values())
+    out["total_count"] = sum(v["count"] for v in stats.values())
+    return out
+
+
+def collective_schedule(hlo_text: str, limit: int = 40) -> list[str]:
+    """Ordered summary of collectives (for EXPERIMENTS.md §Dry-run)."""
+    lines = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if any(f"{k}(" in s or f"{k}-start(" in s for k in _COLLECTIVES):
+            op = s.split(" = ", 1)[-1][:110]
+            lines.append(op)
+            if len(lines) >= limit:
+                break
+    return lines

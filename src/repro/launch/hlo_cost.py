@@ -1,0 +1,351 @@
+"""While-loop-aware FLOP/byte costing of compiled HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a
+scan-over-layers model (while loop) therefore under-reports FLOPs/bytes by
+the trip count (verified experimentally; see EXPERIMENTS.md §Roofline
+methodology). This module re-costs the compiled module with loop
+multiplication:
+
+  cost(computation) = Σ op_cost + Σ_while trips(while) × cost(body)
+
+op costs:
+  dot            2 × |result| × contracted_size   (contraction dims parsed)
+  custom-call    2·m·k·n when the target mentions matmul/dot
+  fusion         cost of the fused computation (dots inside counted)
+  elementwise    |result| flops (minor term)
+bytes: every op contributes |result| × (1 read + 1 write) — a deliberate,
+documented approximation of HBM traffic (fusion internals stay in
+registers on the real machine, so only fusion ROOT results are counted).
+
+Trip counts come from the loop condition's comparison constant (scan
+lowers to `compare(iv, constant(N)), direction=LT`).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "c64": 8, "s64": 8, "u64": 8, "f64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f8e4m3fn|f8e5m2|[suf]\d+|c64|c128)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _shapes(text: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((n, _DTYPE_BYTES.get(dt, 4)))
+    return out
+
+
+def _result_part(rest: str) -> str:
+    """Everything before the opcode = the result type(s)."""
+    m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rest)
+    return rest[: m.start()] if m else rest
+
+
+def _opcode(rest: str) -> str:
+    m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rest)
+    return m.group(1) if m else ""
+
+
+@dataclass
+class _Op:
+    name: str
+    opcode: str
+    rest: str
+    result_elems: int
+    result_bytes: int
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # op name -> full result text
+
+
+def parse_computations(hlo: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{", s)
+        if header and not s.startswith("//"):
+            cur = _Computation(header.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None or s.startswith("}"):
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        name, rest = m.groups()
+        shapes = _shapes(_result_part(rest))
+        elems = sum(n for n, _ in shapes)
+        nbytes = sum(n * b for n, b in shapes)
+        cur.ops.append(_Op(name, _opcode(rest), rest, elems, nbytes))
+        cur.shapes[name] = _result_part(rest)
+    return comps
+
+
+def _dims_list(rest: str, key: str) -> list[int]:
+    m = re.search(rf"{key}={{([\d,]*)}}", rest)
+    if not m or not m.group(1):
+        return []
+    return [int(x) for x in m.group(1).split(",")]
+
+
+def _operand_names(rest: str) -> list[str]:
+    m = re.search(r"\b[a-z][a-z0-9\-]*\(([^)]*)\)", rest)
+    if not m:
+        return []
+    out = []
+    for part in m.group(1).split(","):
+        part = part.strip()
+        mm = re.match(r"(?:[\w\[\],\{\}]+\s+)?%([\w.\-]+)", part)
+        if mm:
+            out.append(mm.group(1))
+    return out
+
+
+def _operand_shape_dims(comp: _Computation, rest: str, idx: int) -> list[int]:
+    """Dims of the idx-th operand (resolved via in-computation def or the
+    inline type annotation)."""
+    # inline annotation: opcode(f32[a,b] %x, ...)
+    m = re.search(r"\b[a-z][a-z0-9\-]*\(([^)]*)\)", rest)
+    if m:
+        parts = [p.strip() for p in m.group(1).split(",")]
+        # reassemble shapes that contain commas: fall back to name lookup
+    names = _operand_names(rest)
+    if idx < len(names) and names[idx] in comp.shapes:
+        sh = _SHAPE_RE.search(comp.shapes[names[idx]])
+        if sh:
+            return [int(x) for x in sh.group(2).split(",") if x]
+    return []
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Largest comparison constant in the loop condition."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_ELEMENTWISE_FLOPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
+    "tanh", "negate", "compare", "select", "rsqrt", "sqrt", "log", "power",
+    "cosine", "sine", "and", "or",
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _collective_kind(opcode: str) -> str | None:
+    for k in _COLLECTIVES:
+        if opcode == k or opcode == k + "-start":
+            return k
+    return None
+
+
+def _collective_traffic(kind: str, result_bytes: int, g: int) -> int:
+    """Per-device link-traffic model (documented in hlo_analysis.py)."""
+    if kind == "all-reduce":
+        return int(2 * result_bytes * (g - 1) / max(g, 1))
+    if kind == "all-gather":
+        return int(result_bytes * (g - 1) / max(g, 1))
+    if kind == "reduce-scatter":
+        return int(result_bytes * (g - 1))
+    if kind == "all-to-all":
+        return int(result_bytes * (g - 1) / max(g, 1))
+    return result_bytes  # collective-permute: one hop
+
+
+def cost_computation(
+    comps: dict[str, _Computation], name: str, memo: dict | None = None
+) -> tuple[float, float, float, float]:
+    """(flops, bytes, collective_traffic, collective_count), loops multiplied."""
+    if memo is None:
+        memo = {}
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    if comp is None:
+        return (0.0, 0.0, 0.0, 0.0)
+    memo[name] = (0.0, 0.0, 0.0, 0.0)  # cycle guard
+    flops = nbytes = coll = ccount = 0.0
+    for op in comp.ops:
+        kind = _collective_kind(op.opcode)
+        if op.opcode == "while":
+            body = _CALLED_RE.search(op.rest)
+            cond = _COND_RE.search(op.rest)
+            trips = 1
+            if cond and cond.group(1) in comps:
+                trips = _trip_count(comps[cond.group(1)])
+            if body:
+                bf, bb, bc, bn = cost_computation(comps, body.group(1), memo)
+                flops += trips * bf
+                nbytes += trips * bb
+                coll += trips * bc
+                ccount += trips * bn
+        elif kind is not None:
+            g = _group_size(op.rest)
+            rbytes = op.result_bytes
+            if op.opcode.endswith("-start"):
+                rbytes //= 2  # async start results alias (operand, dest)
+            coll += _collective_traffic(kind, rbytes, g)
+            ccount += 1
+            nbytes += 2 * rbytes
+        elif op.opcode == "fusion":
+            called = _CALLED_RE.search(op.rest)
+            if called:
+                ff, _, _, _ = cost_computation(comps, called.group(1), memo)
+                flops += ff
+            nbytes += 2 * op.result_bytes  # fusion internals stay fused
+        elif op.opcode in ("call", "conditional", "map"):
+            called = _CALLED_RE.search(op.rest)
+            if called:
+                cf, cb, cc, cn = cost_computation(comps, called.group(1), memo)
+                flops += cf
+                nbytes += cb
+                coll += cc
+                ccount += cn
+        elif op.opcode == "dot":
+            contracting = _dims_list(op.rest, "lhs_contracting_dims")
+            lhs_dims = _operand_shape_dims(comp, op.rest, 0)
+            csize = 1
+            for d in contracting:
+                if d < len(lhs_dims):
+                    csize *= lhs_dims[d]
+            flops += 2.0 * op.result_elems * max(csize, 1)
+            nbytes += 2 * op.result_bytes
+        elif op.opcode == "custom-call":
+            if re.search(r"matmul|dot|gemm", op.rest, re.I):
+                lhs = _operand_shape_dims(comp, op.rest, 0)
+                k = lhs[-1] if lhs else 1
+                flops += 2.0 * op.result_elems * k
+            nbytes += 2 * op.result_bytes
+        elif op.opcode in ("parameter", "constant", "get-tuple-element", "tuple",
+                           "bitcast", "iota"):
+            pass
+        else:
+            if op.opcode in _ELEMENTWISE_FLOPS:
+                flops += op.result_elems
+            nbytes += 2 * op.result_bytes
+    memo[name] = (flops, nbytes, coll, ccount)
+    return memo[name]
+
+
+def top_collectives(hlo: str, n: int = 15) -> list[dict]:
+    """Per-collective traffic × loop-trip multiplier, sorted descending —
+    the §Perf 'where is it going' view."""
+    comps = parse_computations(hlo)
+    # compute the trip multiplier of every computation (product of enclosing
+    # while trip counts), by walking from the entry.
+    mult: dict[str, int] = {}
+
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+
+    def walk(name: str, factor: int):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        if mult.get(name, 0) >= factor:
+            return
+        mult[name] = factor
+        for op in comp.ops:
+            called = _CALLED_RE.search(op.rest)
+            if op.opcode == "while":
+                cond = _COND_RE.search(op.rest)
+                trips = 1
+                if cond and cond.group(1) in comps:
+                    trips = _trip_count(comps[cond.group(1)])
+                if called:
+                    walk(called.group(1), factor * trips)
+            elif called:
+                walk(called.group(1), factor)
+
+    if entry:
+        walk(entry, 1)
+
+    rows = []
+    for cname, comp in comps.items():
+        f = mult.get(cname, 0)
+        if f == 0:
+            continue
+        for op in comp.ops:
+            kind = _collective_kind(op.opcode)
+            if kind is None:
+                continue
+            g = _group_size(op.rest)
+            rbytes = op.result_bytes
+            if op.opcode.endswith("-start"):
+                rbytes //= 2
+            traffic = _collective_traffic(kind, rbytes, g)
+            rows.append({
+                "kind": kind,
+                "result": _result_part(op.rest).strip()[:60],
+                "trips": f,
+                "traffic_total": traffic * f,
+            })
+    rows.sort(key=lambda r: -r["traffic_total"])
+    return rows[:n]
+
+
+def loop_aware_cost(hlo: str) -> dict:
+    """Entry point: loop-multiplied flops/bytes/collective traffic."""
+    comps = parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        entry = next((n for n in comps if "main" in n), next(iter(comps), None))
+    flops, nbytes, coll, ccount = cost_computation(comps, entry)
+    return {
+        "flops": flops,
+        "bytes": nbytes,
+        "collective_traffic_bytes": coll,
+        "collective_count": ccount,
+        "entry": entry,
+        "n_computations": len(comps),
+    }

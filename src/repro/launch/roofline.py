@@ -1,0 +1,110 @@
+"""Roofline terms from the compiled dry-run artifact (TPU v5e targets).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_traffic_per_device / link_bw
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (inference) and the
+usefulness ratio MODEL_FLOPS / (HLO_FLOPs × n_devices)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PEAK_FLOPS_BF16 = 197e12     # per v5e chip
+HBM_BW = 819e9               # B/s per chip
+ICI_LINK_BW = 50e9           # B/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    n_devices: int
+    model_flops_global: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilisation at the roofline step time."""
+        t = self.step_time_s
+        if t == 0:
+            return 0.0
+        return self.model_flops_global / (t * self.n_devices * PEAK_FLOPS_BF16)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "n_devices": self.n_devices,
+            "model_flops_global": self.model_flops_global,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_step_s": self.step_time_s,
+            "mfu_at_roofline": self.mfu,
+        }
+
+
+def expert_param_count(skeleton) -> int:
+    """Parameters living on an 'experts' logical axis."""
+    import jax
+    from repro.models.param import ParamDef
+
+    total = 0
+    for leaf in jax.tree.leaves(skeleton, is_leaf=lambda x: isinstance(x, ParamDef)):
+        if "experts" in leaf.logical_axes:
+            total += int(np.prod(leaf.shape))
+    return total
+
+
+def model_flops(cfg, skeleton, kind: str, seq: int, batch: int) -> float:
+    """6·N·D (train) / 2·N_active·D (prefill) / 2·N_active·B (decode)."""
+    from repro.models.param import param_count
+
+    n = param_count(skeleton)
+    if cfg.moe is not None:
+        e_params = expert_param_count(skeleton)
+        active_frac = cfg.moe.top_k / cfg.moe.n_experts
+        n = n - e_params + e_params * active_frac
+    if kind == "train":
+        return 6.0 * n * seq * batch
+    if kind == "prefill":
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch  # decode: one token per request

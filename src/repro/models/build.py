@@ -1,0 +1,157 @@
+"""config → Model bundle: init/abstract/loss/prefill/decode/input_specs.
+
+Every assigned architecture flows through here; the launch layer (train,
+serve, dryrun) only ever talks to a ``Model``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.layers import softmax_xent
+from repro.models.param import abstract_params, init_params, param_count, partition_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    skeleton: Any
+    loss_fn: Callable          # (params, batch) -> (loss, metrics)
+    prefill_fn: Callable       # (params, batch, caches) -> (logits, caches)
+    decode_fn: Callable | None # (params, token, pos, caches, extras) -> (logits, caches)
+    init_cache_fn: Callable | None  # (batch, max_len, dtype) -> caches
+
+    def init(self, key, dtype=None):
+        return init_params(self.skeleton, key, dtype)
+
+    def abstract(self, dtype=None):
+        return abstract_params(self.skeleton, dtype)
+
+    def specs(self, rules: dict):
+        return partition_specs(self.skeleton, rules)
+
+    @property
+    def n_params(self) -> int:
+        return param_count(self.skeleton)
+
+
+def _lm_like(cfg: ModelConfig, forward, skel, init_cache):
+    """Bundle for decoder-style LMs (dense/moe/vlm/hybrid/ssm)."""
+
+    def loss_fn(params, batch):
+        extras = {}
+        if "patches" in batch:
+            extras["prefix_embeds"] = batch["patches"]
+        if cfg.mtp:
+            logits, _, aux, hidden = forward(
+                params, batch["tokens"], cfg, return_hidden=True, **extras
+            )
+        else:
+            logits, _, aux = forward(params, batch["tokens"], cfg, **extras)
+        n_prefix = logits.shape[1] - batch["tokens"].shape[1]
+        logits_tok = logits[:, n_prefix:]
+        loss = softmax_xent(logits_tok[:, :-1], batch["tokens"][:, 1:])
+        metrics = {"xent": loss}
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.aux_loss_weight * aux
+            metrics["aux"] = aux
+        if cfg.mtp:
+            ml = T.mtp_logits(params, hidden, batch["tokens"], cfg)
+            mtp_loss = softmax_xent(ml[:, :-1], batch["tokens"][:, 2:])
+            loss = loss + cfg.mtp_weight * mtp_loss
+            metrics["mtp"] = mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def prefill_fn(params, batch, caches):
+        extras = {}
+        if "patches" in batch:
+            extras["prefix_embeds"] = batch["patches"]
+        logits, caches, _ = forward(
+            params, batch["tokens"], cfg, caches=caches, **extras
+        )
+        return logits[:, -1], caches
+
+    def decode_fn(params, token, pos, caches, extras=None):
+        logits, caches, _ = forward(
+            params, token, cfg, pos0=pos, caches=caches, decode=True
+        )
+        return logits[:, -1], caches
+
+    return Model(cfg, skel, loss_fn, prefill_fn, decode_fn, init_cache)
+
+
+def _encdec(cfg: ModelConfig):
+    skel = T.encdec_skel(cfg)
+
+    def loss_fn(params, batch):
+        logits, _, _ = T.encdec_forward(
+            params, batch["tokens"], cfg, frames=batch["frames"]
+        )
+        loss = softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])
+        return loss, {"xent": loss, "loss": loss}
+
+    def prefill_fn(params, batch, caches):
+        enc_out = T.encoder_forward(params, batch["frames"], cfg)
+        logits, caches, _ = T.encdec_forward(
+            params, batch["tokens"], cfg, enc_out=enc_out, caches=caches
+        )
+        return logits[:, -1], caches
+
+    def decode_fn(params, token, pos, caches, extras=None):
+        logits, caches, _ = T.encdec_forward(
+            params, token, cfg, pos0=pos, caches=caches, decode=True
+        )
+        return logits[:, -1], caches
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16):
+        return T.encdec_init_cache(cfg, batch, max_len, dtype)
+
+    return Model(cfg, skel, loss_fn, prefill_fn, decode_fn, init_cache)
+
+
+def _spectral(cfg: ModelConfig):
+    """FNet-style masked-LM (bidirectional mixing ⇒ no causal decode)."""
+    skel = T.spectral_skel(cfg)
+
+    def loss_fn(params, batch):
+        logits, _, _ = T.spectral_forward(params, batch["tokens"], cfg)
+        mask = batch.get("mlm_mask")
+        targets = batch.get("targets", batch["tokens"])
+        loss = softmax_xent(logits, targets, mask)
+        return loss, {"xent": loss, "loss": loss}
+
+    def prefill_fn(params, batch, caches):
+        logits, _, _ = T.spectral_forward(params, batch["tokens"], cfg)
+        return logits[:, -1], caches
+
+    return Model(cfg, skel, loss_fn, prefill_fn, None, None)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _lm_like(
+            cfg, T.lm_forward, T.lm_skel(cfg),
+            lambda b, s, dtype=jnp.bfloat16: T.lm_init_cache(cfg, b, s, dtype),
+        )
+    if cfg.family == "hybrid":
+        return _lm_like(
+            cfg, T.hybrid_forward, T.hybrid_skel(cfg),
+            lambda b, s, dtype=jnp.bfloat16: T.hybrid_init_cache(cfg, b, s, dtype),
+        )
+    if cfg.family == "ssm":
+        return _lm_like(
+            cfg, T.xlstm_forward, T.xlstm_skel(cfg),
+            lambda b, s, dtype=jnp.float32: T.xlstm_init_cache(cfg, b, s, dtype),
+        )
+    if cfg.family == "audio":
+        return _encdec(cfg)
+    if cfg.family == "spectral":
+        return _spectral(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,106 @@
+"""Shared neural layers (pure functions over ParamDef skeletons)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+from repro.sharding.ctx import shard
+
+
+# ----------------------------- norms -----------------------------
+
+def rmsnorm_skel(d: int) -> dict:
+    return {"scale": ParamDef((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"].astype(x.dtype)
+
+
+# --------------------------- embeddings ---------------------------
+
+def embedding_skel(vocab: int, d: int) -> dict:
+    return {"table": ParamDef((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(p, tokens, compute_dtype):
+    x = jnp.take(p["table"], tokens, axis=0).astype(compute_dtype)
+    return shard(x, "dp", None, None)
+
+
+def unembed_skel(vocab: int, d: int) -> dict:
+    return {"kernel": ParamDef((d, vocab), ("embed", "vocab"))}
+
+
+def unembed(p, x):
+    # logits in f32 for a stable softmax/loss
+    return jnp.einsum("...d,dv->...v", x, p["kernel"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+
+
+# ------------------------------ MLP ------------------------------
+
+def mlp_skel(d: int, d_ff: int, act: str = "swiglu") -> dict:
+    skel = {
+        "up": ParamDef((d, d_ff), ("embed", "mlp")),
+        "down": ParamDef((d_ff, d), ("mlp", "embed")),
+    }
+    if act == "swiglu":
+        skel["gate"] = ParamDef((d, d_ff), ("embed", "mlp"))
+    return skel
+
+
+def mlp(p, x, act: str = "swiglu"):
+    dt = x.dtype
+    # constrain the INPUT as well: the transpose of this constraint pins the
+    # backward cotangent dx to batch-sharded — without it the partitioner
+    # materialises full-batch partial sums (30 GB AR/layer on deepseek;
+    # EXPERIMENTS.md §Perf cell A iteration 3).
+    x = shard(x, "dp", None, None)
+    up = jnp.einsum("bsd,df->bsf", x, p["up"].astype(dt))
+    up = shard(up, "dp", None, "tp")
+    if act == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["gate"].astype(dt))
+        gate = shard(gate, "dp", None, "tp")
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    y = jnp.einsum("bsf,fd->bsd", h, p["down"].astype(dt))
+    return shard(y, "dp", None, None)
+
+
+# ------------------------------ RoPE ------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, Dh) with rotary over Dh; positions: (..., S) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (Dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------- loss utils ---------------------------
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token cross entropy. logits (..., V) f32, labels int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

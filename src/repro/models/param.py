@@ -1,0 +1,122 @@
+"""Module-less parameter system: models are (skeleton, pure functions).
+
+A *skeleton* is a pytree of ``ParamDef`` describing every weight: shape,
+dtype, init, and **logical axes** (names like "embed", "heads", "mlp").
+From a skeleton we derive, without ever allocating:
+
+  * ``init_params``      — concrete arrays (CPU smoke tests, real training)
+  * ``abstract_params``  — ShapeDtypeStructs (the multi-pod dry-run)
+  * ``partition_specs``  — PartitionSpec per leaf, via per-config sharding
+                           rules (``repro.sharding.rules``)
+
+This is what lets the 671B-parameter configs lower+compile on one CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "scaled"
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical_axes):
+            raise ValueError(
+                f"rank mismatch: shape {self.shape} vs axes {self.logical_axes}"
+            )
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(skeleton, key: jax.Array, dtype=None):
+    """Materialise a skeleton into concrete arrays."""
+    leaves, treedef = jax.tree.flatten(skeleton, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = dtype or d.dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            fan_in = d.shape[0] if d.shape else 1
+            std = d.scale * (1.0 / math.sqrt(max(fan_in, 1)))
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * std).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(skeleton, dtype=None):
+    """ShapeDtypeStruct tree — zero allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype or d.dtype),
+        skeleton,
+        is_leaf=_is_def,
+    )
+
+
+def partition_specs(skeleton, rules: dict[str, Any]):
+    """logical axes -> PartitionSpec using a {logical_name: mesh_axes} map.
+
+    Unknown logical names are replicated. ``rules`` values may be None, a
+    mesh-axis name, or a tuple of mesh-axis names.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def one(d: ParamDef):
+        spec = []
+        used: set[str] = set()
+        for a in d.logical_axes:
+            r = rules.get(a) if a is not None else None
+            axes = (r,) if isinstance(r, str) else tuple(r or ())
+            # a mesh axis may appear at most once per spec (first wins)
+            axes = tuple(ax for ax in axes if ax not in used)
+            used.update(axes)
+            if not axes:
+                spec.append(None)
+            elif len(axes) == 1:
+                spec.append(axes[0])
+            else:
+                spec.append(axes)
+        return P(*spec)
+
+    return jax.tree.map(one, skeleton, is_leaf=_is_def)
+
+
+def param_count(skeleton) -> int:
+    leaves = jax.tree.leaves(skeleton, is_leaf=_is_def)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+def param_bytes(skeleton) -> int:
+    leaves = jax.tree.leaves(skeleton, is_leaf=_is_def)
+    return int(
+        sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize for d in leaves)
+    )
+
+
+def stack_defs(d: ParamDef, n: int, axis_name: str = "layers") -> ParamDef:
+    """Add a leading stacked-layer dimension (for scan-over-layers)."""
+    return dataclasses.replace(
+        d,
+        shape=(n, *d.shape),
+        logical_axes=(axis_name, *d.logical_axes),
+    )
+
+
+def stack_skeleton(skel, n: int, axis_name: str = "layers"):
+    return jax.tree.map(lambda d: stack_defs(d, n, axis_name), skel, is_leaf=_is_def)

@@ -1,0 +1,209 @@
+"""Mamba2 (State-Space Duality) block: chunked parallel scan + recurrent decode.
+
+Parallel (train/prefill) path is the standard SSD chunk decomposition:
+intra-chunk quadratic attention-like term + inter-chunk state recurrence.
+Decode path is the O(1) recurrent update on a (H, P, N) state — this is what
+makes the hybrid/ssm archs eligible for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.param import ParamDef
+from repro.sharding.ctx import shard
+
+
+def mamba2_skel(cfg: ModelConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return {
+        "in_proj": ParamDef(
+            (d, 2 * d_in + 2 * s.d_state + nh), ("embed", "ssm_in")
+        ),
+        "conv_w": ParamDef((s.d_conv, conv_dim), (None, "ssm_in"), scale=0.5),
+        "conv_b": ParamDef((conv_dim,), ("ssm_in",), init="zeros"),
+        "a_log": ParamDef((nh,), ("heads",), init="zeros"),
+        "dt_bias": ParamDef((nh,), ("heads",), init="zeros"),
+        "d_skip": ParamDef((nh,), ("heads",), init="ones"),
+        "norm": ParamDef((d_in,), ("mlp",), init="ones"),
+        "out_proj": ParamDef((d_in, d), ("mlp", "embed")),
+    }
+
+
+def mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return {
+        "ssd": jnp.zeros((batch, nh, s.head_dim, s.d_state), dtype),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def _split_proj(z, d_in, d_state, nh):
+    zx = z[..., :d_in]
+    xbc = z[..., d_in : 2 * d_in + 2 * d_state]
+    dt = z[..., 2 * d_in + 2 * d_state :]
+    return zx, xbc, dt
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv over time. xbc: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1]] * w[i].astype(xbc.dtype) for i in range(k)
+    )
+    new_state = xp[:, xp.shape[1] - (k - 1) :]
+    return jax.nn.silu(out + b.astype(xbc.dtype)), new_state
+
+
+def _gated_rmsnorm(y, z, w, eps=1e-5):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps).astype(y.dtype)) * w.astype(y.dtype)
+
+
+def _ssd_chunked(x, dt, a, b_mat, c_mat, d_skip, chunk, init_state=None):
+    """SSD parallel form.
+
+    x: (B, L, H, P); dt: (B, L, H) (post-softplus); a: (H,) negative;
+    b_mat/c_mat: (B, L, N); returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = l // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]              # (B,nc,cs,H) negative increments
+    da_cum = jnp.cumsum(da, axis=2)
+    x_dt = xc * dtc[..., None]
+
+    # Intra-chunk (masked decay kernel): y[i] += sum_{j<=i} C_i·B_j e^{cum_i-cum_j} x_dt[j]
+    seg = da_cum[:, :, :, None, :] - da_cum[:, :, None, :, :]   # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp of the (positive) upper triangle would overflow and
+    # poison the where-gradient with 0·inf.
+    seg = jnp.where(mask[None, None, :, :, None], seg, -1e9)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)                  # (B,nc,i,j)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay.astype(x.dtype), x_dt)
+
+    # Chunk summary states: S_c = sum_j e^{cum_last - cum_j} B_j x_dt[j]
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)        # (B,nc,cs,H)
+    states = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchpn", bc, decay_to_end.astype(x.dtype), x_dt
+    )
+
+    # Inter-chunk recurrence (sequential over nc chunks).
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])                   # (B,nc,H)
+    s0 = (
+        jnp.zeros((bsz, h, p, n), x.dtype)
+        if init_state is None
+        else init_state.astype(x.dtype)
+    )
+
+    def step(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    (s_final, s_prevs) = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay.astype(x.dtype), 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                        # (B,nc,H,P,N)
+
+    # Off-diagonal: y[i] += C_i e^{cum_i} S_{c-1}
+    decay_from_start = jnp.exp(da_cum).astype(x.dtype)           # (B,nc,cs,H)
+    y_off = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp", cc, s_prevs, decay_from_start
+    )
+    y = (y_diag + y_off).reshape(bsz, l, h, p) + x * d_skip[None, None, :, None]
+    return y, s_final
+
+
+def mamba2_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: dict | None = None,
+    decode: bool = False,
+):
+    """Returns (y, new_state). x: (B, L, D) (L == 1 when decode)."""
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    dt_ = x.dtype
+    z = jnp.einsum("bld,dk->blk", x, p["in_proj"].astype(dt_))
+    # channels TP-sharded: heads (H=d_in/head_dim) stay sharded through the
+    # SSD einsums; the small shared B/C projections get gathered per layer.
+    z = shard(z, "dp", None, "tp")
+    zx, xbc_raw, dt_raw = _split_proj(z, d_in, s.d_state, nh)
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"], conv_state)
+    xi = xbc[..., :d_in]
+    b_mat = xbc[..., d_in : d_in + s.d_state]
+    c_mat = xbc[..., d_in + s.d_state :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                     # (H,) negative
+    xh = xi.reshape(*xi.shape[:-1], nh, s.head_dim)
+
+    if decode:
+        assert state is not None
+        # h' = h·exp(dt·a) + dt·B⊗x ; y = C·h' + D·x   (single step)
+        dtb = dt[:, 0]                                   # (B,H)
+        dec = jnp.exp(dtb * a[None, :])                  # (B,H)
+        xb = jnp.einsum(
+            "bhp,bn->bhpn", xh[:, 0].astype(jnp.float32), b_mat[:, 0].astype(jnp.float32)
+        )
+        h_new = state["ssd"] * dec[..., None, None] + xb * dtb[..., None, None]
+        y = jnp.einsum("bhpn,bn->bhp", h_new, c_mat[:, 0].astype(jnp.float32))
+        y = y + xh[:, 0].astype(jnp.float32) * p["d_skip"][None, :, None]
+        y = y.reshape(x.shape[0], 1, d_in).astype(dt_)
+        new_state = {"ssd": h_new, "conv": new_conv.astype(state["conv"].dtype)}
+    else:
+        l0 = xh.shape[1]
+        chunk = min(s.chunk, l0)
+        pad = (-l0) % chunk
+        xh_p, b_p, c_p, dt_p = xh, b_mat, c_mat, dt
+        if pad:
+            # state-neutral padding: dt=0 ⇒ decay=1 and zero state injection
+            zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+            xh_p, b_p, c_p, dt_p = zpad(xh), zpad(b_mat), zpad(c_mat), zpad(dt)
+        init = state["ssd"] if state is not None else None
+        y4, s_final = _ssd_chunked(
+            xh_p.astype(jnp.float32), dt_p, a, b_p.astype(jnp.float32),
+            c_p.astype(jnp.float32), p["d_skip"].astype(jnp.float32),
+            chunk, init_state=init,
+        )
+        y4 = y4[:, :l0].astype(dt_)
+        y = y4.reshape(x.shape[0], -1, d_in)
+        new_state = {
+            "ssd": s_final.astype(jnp.float32),
+            "conv": new_conv.astype(jnp.float32)
+            if state is None
+            else new_conv.astype(state["conv"].dtype),
+        }
+
+    y = _gated_rmsnorm(y, zx, p["norm"], cfg.rms_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"].astype(dt_))
+    return shard(out, "dp", None, None), new_state

@@ -1,0 +1,282 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelisable) and sLSTM (scalar
+memory, strictly recurrent), after Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM has two mathematically-equivalent forms (tested against each other):
+  * parallel  — stabilised quadratic form for train/prefill;
+  * recurrent — O(1) (C, n, m) state update for decode (long_500k eligible).
+sLSTM is a lax.scan over time in both modes (exponential gating with the
+m-stabiliser), with block-diagonal recurrent weights (4 heads).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamDef
+from repro.sharding.ctx import shard
+
+NEG_INF = -1.0e30
+
+
+# ------------------------------- mLSTM -------------------------------
+
+def mlstm_skel(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in = 2 * d                      # up-projection factor 2
+    h = cfg.n_heads
+    dh = d_in // h
+    return {
+        "up": ParamDef((d, 2 * d_in), ("embed", "mlp")),       # x_in, z gate
+        "wq": ParamDef((d_in, h, dh), ("mlp", "heads", "head_dim")),
+        "wk": ParamDef((d_in, h, dh), ("mlp", "heads", "head_dim")),
+        "wv": ParamDef((d_in, h, dh), ("mlp", "heads", "head_dim")),
+        "wi": ParamDef((d_in, h), ("mlp", "heads"), scale=0.1),
+        "wf": ParamDef((d_in, h), ("mlp", "heads"), scale=0.1),
+        "fb": ParamDef((h,), ("heads",), init="ones", scale=3.0),
+        "norm": ParamDef((d_in,), ("mlp",), init="ones"),
+        "down": ParamDef((d_in, d), ("mlp", "embed")),
+    }
+
+
+def mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in = 2 * cfg.d_model
+    h = cfg.n_heads
+    dh = d_in // h
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), dtype),   # matrix memory (k ⊗ v)
+        "n": jnp.zeros((batch, h, dh), dtype),
+        "m": jnp.full((batch, h), -jnp.inf, dtype),
+    }
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f):
+    """Stabilised parallel mLSTM. q,k,v: (B,L,H,Dh); gates: (B,L,H) logs."""
+    b, l, h, dh = q.shape
+    lf_cum = jnp.cumsum(log_f, axis=1)                       # (B,L,H)
+    # log D[t,s] = lfcum[t] − lfcum[s] + log_i[s]  for s ≤ t
+    ld = lf_cum[:, :, None, :] - lf_cum[:, None, :, :] + log_i[:, None, :, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    ld = jnp.where(mask[None, :, :, None], ld, NEG_INF)
+    m = jnp.max(ld, axis=2)                                  # (B,L,H) row-stabiliser
+    d_mat = jnp.exp(ld - m[:, :, None, :])
+    qk = jnp.einsum("blhd,bshd->blsh", q, k) / math.sqrt(dh)
+    c = qk * d_mat
+    n = jnp.maximum(jnp.abs(jnp.sum(c, axis=2)), jnp.exp(-m))  # (B,L,H)
+    return jnp.einsum("blsh,bshd->blhd", c, v) / n[..., None]
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int, state0: dict):
+    """Chunkwise mLSTM: intra-chunk quadratic + inter-chunk (C, n, m) carry.
+
+    Peak score memory is (B, Q, Q, H) per chunk instead of (B, L, L, H) —
+    the same decomposition SSD uses, applied to the mLSTM decay kernel.
+    q,k,v: (B, L, H, Dh) f32; gates (B, L, H) log-space. Returns (y, state).
+    """
+    b, l, h, dh = q.shape
+    nc = l // chunk
+    q = (q / math.sqrt(dh)).reshape(b, nc, chunk, h, dh)
+    k = k.reshape(b, nc, chunk, h, dh)
+    v = v.reshape(b, nc, chunk, h, dh)
+    li = log_i.reshape(b, nc, chunk, h)
+    lf = log_f.reshape(b, nc, chunk, h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        qc, kc, vc, lic, lfc = inp
+        lf_cum = jnp.cumsum(lfc, axis=1)                     # (B,Q,H)
+        ld = lf_cum[:, :, None, :] - lf_cum[:, None, :, :] + lic[:, None, :, :]
+        ld = jnp.where(mask[None, :, :, None], ld, NEG_INF)
+        local_max = jnp.max(ld, axis=2)                      # (B,Q,H)
+        m_t = jnp.maximum(local_max, lf_cum + m_prev[:, None, :])
+        inter = jnp.exp(lf_cum + m_prev[:, None, :] - m_t)   # (B,Q,H)
+        num = jnp.einsum("bqhd,bhdv->bqhv", qc, c_prev) * inter[..., None]
+        den = jnp.einsum("bqhd,bhd->bqh", qc, n_prev) * inter
+        d_mat = jnp.exp(ld - m_t[:, :, None, :])
+        cm = jnp.einsum("bqhd,bshd->bqsh", qc, kc) * d_mat
+        num = num + jnp.einsum("bqsh,bshv->bqhv", cm, vc)
+        den = jnp.maximum(jnp.abs(den + cm.sum(axis=2)), jnp.exp(-m_t))
+        y = num / den[..., None]
+        # end-of-chunk state
+        lf_tot = lf_cum[:, -1]                               # (B,H)
+        tail = lf_tot[:, None, :] - lf_cum + lic             # (B,Q,H)
+        m_next = jnp.maximum(m_prev + lf_tot, jnp.max(tail, axis=1))
+        b_scale = jnp.exp(tail - m_next[:, None, :])
+        c_carry = jnp.exp(m_prev + lf_tot - m_next)
+        c_new = c_prev * c_carry[..., None, None] + jnp.einsum(
+            "bshd,bsh,bshv->bhdv", kc, b_scale, vc
+        )
+        n_new = n_prev * c_carry[..., None] + jnp.einsum("bshd,bsh->bhd", kc, b_scale)
+        return (c_new, n_new, m_next), y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, li, lf))
+    (c, n, m), ys = jax.lax.scan(
+        step, (state0["c"], state0["n"], state0["m"]), xs
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, h, dh)
+    return y, {"c": c, "n": n, "m": m}
+
+
+def _mlstm_recurrent_step(state, q, k, v, log_i, log_f):
+    """One decode step. q,k,v: (B,H,Dh); gates (B,H) logs. Returns (h, state)."""
+    dh = q.shape[-1]
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_sc = jnp.exp(log_i - m_new)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    c = state["c"] * f_sc[..., None, None] + i_sc[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = state["n"] * f_sc[..., None] + i_sc[..., None] * k
+    qs = q / math.sqrt(dh)
+    num = jnp.einsum("bhd,bhdv->bhv", qs, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)), jnp.exp(-m_new))
+    return num / den[..., None], {"c": c, "n": n, "m": m_new}
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, *, state=None, decode=False):
+    """Returns (y, new_state). x: (B, L, D)."""
+    d_in = 2 * cfg.d_model
+    h = cfg.n_heads
+    dt = x.dtype
+    up = shard(jnp.einsum("bld,dk->blk", x, p["up"].astype(dt)), "dp", None, "tp")
+    x_in, z = up[..., :d_in], up[..., d_in:]
+    # 4 heads can't TP-shard: run the recurrence 2-D batch-parallel instead.
+    bt = "dp" if decode else "dp+tp"
+    q = shard(
+        jnp.einsum("blk,khd->blhd", x_in, p["wq"].astype(dt)).astype(jnp.float32),
+        bt, None, None, None,
+    )
+    k = shard(
+        jnp.einsum("blk,khd->blhd", x_in, p["wk"].astype(dt)).astype(jnp.float32),
+        bt, None, None, None,
+    )
+    v = shard(
+        jnp.einsum("blk,khd->blhd", x_in, p["wv"].astype(dt)).astype(jnp.float32),
+        bt, None, None, None,
+    )
+    log_i = jnp.einsum("blk,kh->blh", x_in.astype(jnp.float32), p["wi"])
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("blk,kh->blh", x_in.astype(jnp.float32), p["wf"]) + p["fb"]
+    )
+
+    if decode:
+        assert state is not None
+        y1, new_state = _mlstm_recurrent_step(
+            state, q[:, 0], k[:, 0], v[:, 0], log_i[:, 0], log_f[:, 0]
+        )
+        y = y1[:, None]  # (B,1,H,Dh)
+    else:
+        l0 = q.shape[1]
+        chunk = min(256, l0)
+        pad = (-l0) % chunk
+        if pad:
+            # state-neutral padding: log_f=0 (decay 1), log_i=-inf (no write)
+            zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+            q, k, v = zpad(q), zpad(k), zpad(v)
+            log_f = zpad(log_f)
+            log_i = jnp.pad(
+                log_i, [(0, 0), (0, pad), (0, 0)], constant_values=NEG_INF
+            )
+        s0 = state if state is not None else mlstm_state(cfg, x.shape[0])
+        y, new_state = _mlstm_chunked(q, k, v, log_i, log_f, chunk, s0)
+        y = y[:, :l0]
+        if state is None:
+            new_state = None
+
+    y = y.reshape(x.shape[0], -1, d_in).astype(dt)
+    # gated output norm + down-projection
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.rms_eps).astype(dt)) * p["norm"].astype(dt)
+    out = jnp.einsum("blk,kd->bld", y, p["down"].astype(dt))
+    return shard(out, "dp", None, None), new_state
+
+
+# ------------------------------- sLSTM -------------------------------
+
+_SLSTM_HEADS = 4
+
+
+def _round128(n: int) -> int:
+    return (n + 127) // 128 * 128
+
+
+def slstm_skel(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = d // _SLSTM_HEADS
+    # xLSTM's 4/3 FF factor, rounded up to a lane-aligned (and TP-shardable)
+    # multiple of 128 — hardware adaptation noted in DESIGN.md.
+    ff = _round128((4 * d) // 3) if d >= 96 else (4 * d) // 3
+    return {
+        # The strictly-sequential recurrence distributes over BATCH only:
+        # TP-sharding wx/wr forced a reshard every timestep (pathological
+        # "involuntary full rematerialization" in the SPMD partitioner), so
+        # the in-loop weights stay replicated and small.
+        "wx": ParamDef((d, 4 * d), ("embed", None)),           # i,f,z,o from input
+        "wr": ParamDef((_SLSTM_HEADS, hd, 4 * hd), (None, None, None), scale=0.5),
+        "bias": ParamDef((4 * d,), (None,), init="zeros"),
+        "norm": ParamDef((d,), ("embed",), init="ones"),
+        "ff_up": ParamDef((d, ff), ("embed", "mlp")),
+        "ff_down": ParamDef((ff, d), ("mlp", "embed")),
+    }
+
+
+def slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), dtype),
+        "n": jnp.zeros((batch, d), dtype),
+        "h": jnp.zeros((batch, d), dtype),
+        "m": jnp.full((batch, d), -jnp.inf, dtype),
+    }
+
+
+def _slstm_step(p, s, x_t, d: int):
+    """One sLSTM time step (exponential gating, m-stabilised)."""
+    hd = d // _SLSTM_HEADS
+    hprev = s["h"].reshape(-1, _SLSTM_HEADS, hd)
+    rec = jnp.einsum("bhk,hkj->bhj", hprev, p["wr"]).reshape(-1, 4 * d)
+    gates = x_t + rec + p["bias"]
+    it, ft, zt, ot = jnp.split(gates, 4, axis=-1)
+    log_i = it
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + s["m"], log_i)
+    i_sc = jnp.exp(log_i - m_new)
+    f_sc = jnp.exp(log_f + s["m"] - m_new)
+    c = f_sc * s["c"] + i_sc * jnp.tanh(zt)
+    n = f_sc * s["n"] + i_sc
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(p, x, cfg: ModelConfig, *, state=None, decode=False):
+    """Returns (y, new_state). Sequential over L in both modes."""
+    d = cfg.d_model
+    dt = x.dtype
+    b = x.shape[0]
+    xg = jnp.einsum("bld,dk->blk", x.astype(jnp.float32), p["wx"])
+    s0 = state if state is not None else slstm_state(cfg, b)
+
+    if decode:
+        s_new = _slstm_step(p, s0, xg[:, 0], d)
+        hs = s_new["h"][:, None]
+    else:
+        def step(s, x_t):
+            s2 = _slstm_step(p, s, x_t, d)
+            return s2, s2["h"]
+
+        s_new, hs = jax.lax.scan(step, s0, jnp.moveaxis(xg, 0, 1))
+        hs = jnp.moveaxis(hs, 0, 1)  # (B, L, D)
+
+    y = hs.astype(dt)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.rms_eps).astype(dt)) * p["norm"].astype(dt)
+    h = jax.nn.gelu(
+        shard(jnp.einsum("bld,df->blf", y, p["ff_up"].astype(dt)), "dp", None, "tp")
+    )
+    out = shard(jnp.einsum("blf,fd->bld", h, p["ff_down"].astype(dt)), "dp", None, None)
+    return out, (s_new if (state is not None or decode) else None)

@@ -1,0 +1,12 @@
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
+from repro.optim.compression import compress_int8, decompress_int8, compressed_mean
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "compress_int8",
+    "decompress_int8",
+    "compressed_mean",
+]

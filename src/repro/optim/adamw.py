@@ -1,0 +1,65 @@
+"""AdamW + global-norm clipping + cosine schedule (pure pytree functions)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, dtype=jnp.float32):
+    """``dtype=bf16`` halves optimizer memory for the XXL archs (the dry-run
+    memory notes in EXPERIMENTS.md record when this is required to fit)."""
+    zeros = lambda p: jnp.zeros_like(p, dtype=dtype)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def cosine_schedule(step, *, peak_lr=3e-4, warmup=100, total=10_000, floor=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def clip_by_global_norm(grads, max_norm=1.0):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(
+    params,
+    grads,
+    state,
+    *,
+    lr=None,
+    b1=0.9,
+    b2=0.95,
+    eps=1e-8,
+    weight_decay=0.1,
+    peak_lr=3e-4,
+    warmup=100,
+    total=10_000,
+):
+    step = state["step"] + 1
+    lr_t = cosine_schedule(step, peak_lr=peak_lr, warmup=warmup, total=total) if lr is None else lr
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        update = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * update).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}

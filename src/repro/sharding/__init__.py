@@ -1,0 +1,8 @@
+from repro.sharding.rules import (
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    param_rules,
+)
+
+__all__ = ["batch_specs", "cache_specs", "dp_axes", "param_rules"]

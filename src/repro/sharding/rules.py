@@ -1,0 +1,142 @@
+"""Logical-axis sharding rules (MaxText-style), per config and mesh.
+
+Strategy (DESIGN.md §4):
+  * DP/FSDP over ("pod","data") — params' "embed" axis sharded over data,
+    gathered per-layer inside the scan (ZeRO-3-style).
+  * TP over "model" — MLP hidden, vocab, attention heads (only when the head
+    count divides the model-axis size; otherwise attention weights stay
+    FSDP-only and GSPMD batch-shards attention compute — "hybrid TP").
+  * EP: experts' hidden is TP'd; expert weights are FSDP'd (the ep_a2a MoE
+    path re-shards tokens instead — §Perf).
+  * SP: long-context decode shards the KV/state sequence dim over "model"
+    (and over every axis for the 500k single-request cell).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def use_tp(cfg: ModelConfig, model_size: int = 16) -> bool:
+    """TP strategy selector: archs whose head count doesn't divide the model
+    axis (llama/starcoder2 24H, xlstm 4H — all ≤3.2B params) run pure 2-D
+    batch FSDP instead (weights gathered per layer, batch over data×model).
+    Weight-gather traffic ≈ params/layer; activation-reshard traffic of
+    hybrid TP measured ~3× higher (EXPERIMENTS.md §Perf iteration 2)."""
+    return cfg.n_heads % model_size == 0
+
+
+def param_rules(cfg: ModelConfig, *, multi_pod: bool, model_size: int = 16) -> dict:
+    dp = dp_axes(multi_pod)
+    tp = use_tp(cfg, model_size)
+    ep = cfg.moe is not None and cfg.moe.impl == "ep_a2a"
+    return {
+        "embed": dp,                        # FSDP
+        "vocab": "model" if tp and cfg.vocab % model_size == 0 else None,
+        "mlp": "model" if tp else None,
+        "heads": "model" if tp else None,
+        "kv_heads": None,                   # KV heads replicated across TP
+        "head_dim": None,
+        # expert-parallel: experts sharded over cfg.moe.ep_axes (tokens travel
+        # via all_to_all; expert FFN hidden deliberately NOT TP'd — the spec
+        # dedup drops "model" from the hidden dim when it's used here, which
+        # kills the dispatched-activation psum, §Perf cell A iteration 2);
+        # otherwise unsharded (weights FSDP'd via "embed").
+        "experts": tuple(cfg.moe.ep_axes) if ep else None,
+        "q_lora": None,
+        "kv_lora": None,
+        "ssm_in": "model" if tp else None,
+        "layers": None,                     # scan dim never sharded
+    }
+
+
+def batch_specs(
+    cfg: ModelConfig, kind: str, *, multi_pod: bool, batch: int | None = None
+) -> dict:
+    """PartitionSpecs for the input batch of a train/prefill/decode step."""
+    dp = dp_axes(multi_pod)
+    n_dp = 32 if multi_pod else 16
+    if batch is not None and batch % n_dp != 0:
+        dp = None  # batch-1 long-context cell: replicate batch, SP the cache
+    if kind == "decode":
+        return {"token": P(dp, None), "pos": P()}
+    specs: dict[str, Any] = {"tokens": P(dp, None)}
+    if cfg.family == "audio":
+        specs["frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        specs["patches"] = P(dp, None, None)
+    if cfg.family == "spectral":
+        specs["targets"] = P(dp, None)
+        specs["mlm_mask"] = P(dp, None)
+    return specs
+
+
+def _seq_axes(batch: int, multi_pod: bool, model_size: int):
+    """How to shard a cache's sequence dim: across "model" normally; across
+    EVERYTHING when the whole cell has batch 1 (long-context SP)."""
+    if batch == 1:
+        return ("pod", "data", "model") if multi_pod else ("data", "model")
+    return ("model",)
+
+
+def cache_specs(
+    cfg: ModelConfig,
+    cache_tree: Any,
+    batch: int,
+    *,
+    multi_pod: bool,
+    model_size: int = 16,
+) -> Any:
+    """Name-based PartitionSpecs for every cache leaf (KV, ring, MLA latent,
+    SSM/xLSTM state). Leaves start with a leading stacked-layer dim."""
+    dp = dp_axes(multi_pod)
+    bspec = dp if batch > 1 else None
+    seq_ax = _seq_axes(batch, multi_pod, model_size)
+    heads_ok = cfg.n_heads % model_size == 0
+
+    def spec_for(path, leaf) -> P:
+        name = None
+        keys = [getattr(k, "key", None) for k in path]
+        for key in reversed(keys):
+            if isinstance(key, str):
+                name = key
+                break
+        nd = leaf.ndim
+        if "slstm" in keys:
+            # sequential recurrence distributes over batch only (see xlstm.py)
+            return P(*([None, bspec] + [None] * (nd - 2)))
+        if name in ("k", "v"):            # (L, B, S, KV, Dh)
+            return P(None, bspec, seq_ax, None, None)
+        if name in ("cross_k", "cross_v"):  # (L, B, T, H, Dh)
+            return P(None, bspec, None, "model" if heads_ok else None, None)
+        if name == "c_kv":                # (L, B, S, r)
+            return P(None, bspec, seq_ax, None)
+        if name == "k_rope":              # (L, B, S, dr)
+            return P(None, bspec, seq_ax, None)
+        if name == "slot_pos":            # (L, S) or (S,)
+            return P(*([None] * (nd - 1)), seq_ax)
+        if name == "ssd":                 # (L, B, H, P, N)
+            h = leaf.shape[2]
+            return P(None, bspec, "model" if h % model_size == 0 else None, None, None)
+        if name == "c" and nd == 5:       # mLSTM matrix memory (L,B,H,dk,dv)
+            return P(None, bspec, None, "model" if leaf.shape[3] % model_size == 0 else None, None)
+        # generic recurrent-state fallback (conv, sLSTM vectors, mLSTM n/m):
+        # batch dim -> dp, last dim -> model when divisible.
+        last = "model" if leaf.shape[-1] % model_size == 0 and nd >= 3 else None
+        mids = [None] * (nd - 3) if nd >= 3 else []
+        if nd >= 3:
+            return P(None, bspec, *mids, last)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree.unflatten(treedef, [spec_for(p, l) for p, l in flat])

@@ -1,0 +1,3 @@
+from repro.train.loop import TrainLoop, TrainState, make_train_step
+
+__all__ = ["TrainLoop", "TrainState", "make_train_step"]

@@ -1,0 +1,190 @@
+"""Fault-tolerant training loop: grad accumulation, checkpoint/restart,
+straggler monitoring, optional int8-compressed gradient averaging.
+
+The loop is deliberately boring: all failure handling is explicit and
+testable (tests/train/test_resilience.py kills it mid-run and restarts)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.compression import compressed_mean, init_error_state
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["params", "opt", "error_fb"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    error_fb: Any = None  # compression error-feedback state
+
+    def tree(self):
+        t = {"params": self.params, "opt": self.opt}
+        if self.error_fb is not None:
+            t["error_fb"] = self.error_fb
+        return t
+
+    @classmethod
+    def from_tree(cls, t):
+        return cls(t["params"], t["opt"], t.get("error_fb"))
+
+
+def make_train_step(
+    loss_fn: Callable,
+    *,
+    accum: int = 1,
+    max_norm: float = 1.0,
+    peak_lr: float = 3e-4,
+    warmup: int = 20,
+    total: int = 10_000,
+    compress: bool = False,
+    cast_params=None,
+):
+    """(state, batches) -> (state, metrics). ``batches`` is a pytree whose
+    leaves carry a leading [accum] dim when accum > 1.
+
+    ``cast_params=jnp.bfloat16`` differentiates at a bf16 view of the f32
+    master weights: FSDP weight gathers AND gradient reductions then move
+    bf16 instead of f32 (2× collective cut, §Perf mixtral iteration)."""
+
+    def grad_one(params, batch):
+        if cast_params is not None:
+            view = jax.tree.map(
+                lambda p: p.astype(cast_params)
+                if p.dtype == jnp.float32
+                else p,
+                params,
+            )
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                view, batch
+            )
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        return loss, metrics, grads
+
+    def step(state: TrainState, batches) -> tuple[TrainState, dict]:
+        params = state.params
+        if accum == 1:
+            loss, metrics, grads = grad_one(params, batches)
+        else:
+            def body(carry, micro):
+                g_sum, l_sum = carry
+                loss, _, grads = grad_one(params, micro)
+                return (
+                    jax.tree.map(jnp.add, g_sum, grads),
+                    l_sum + loss,
+                ), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, l_sum), _ = jax.lax.scan(body, (zeros, jnp.zeros(())), batches)
+            grads = jax.tree.map(lambda g: g / accum, g_sum)
+            loss = l_sum / accum
+            metrics = {"loss": loss}
+
+        error_fb = state.error_fb
+        if compress:
+            if error_fb is None:
+                error_fb = init_error_state(grads)
+            grads, error_fb = compressed_mean(grads, error_fb)
+
+        grads, gnorm = clip_by_global_norm(grads, max_norm)
+        new_params, new_opt = adamw_update(
+            params, grads, state.opt, peak_lr=peak_lr, warmup=warmup, total=total
+        )
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return TrainState(new_params, new_opt, error_fb), metrics
+
+    return step
+
+
+class StragglerMonitor:
+    """EWMA step-time monitor. In a multi-host deployment the flag triggers
+    re-balancing / hot-spare swap; here it records and reports."""
+
+    def __init__(self, alpha=0.2, threshold=2.0):
+        self.alpha, self.threshold = alpha, threshold
+        self.ewma = None
+        self.flags: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.threshold * self.ewma
+        if slow:
+            self.flags.append((step, dt))
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+class TrainLoop:
+    """Checkpointed, restartable loop around a jitted train step."""
+
+    def __init__(
+        self,
+        model,
+        *,
+        ckpt_dir: str,
+        batch_fn: Callable[[int], Any],
+        step_fn=None,
+        save_every: int = 50,
+        accum: int = 1,
+        peak_lr: float = 3e-4,
+        compress: bool = False,
+        jit: bool = True,
+    ):
+        self.model = model
+        self.ckpt_dir = ckpt_dir
+        self.batch_fn = batch_fn
+        self.save_every = save_every
+        self.ckpt = AsyncCheckpointer(ckpt_dir)
+        self.monitor = StragglerMonitor()
+        raw = step_fn or make_train_step(
+            model.loss_fn, accum=accum, peak_lr=peak_lr, compress=compress
+        )
+        self.step_fn = jax.jit(raw) if jit else raw
+
+    def init_or_restore(self, key) -> tuple[TrainState, int]:
+        start = latest_step(self.ckpt_dir)
+        params = self.model.init(key)
+        state = TrainState(params, adamw_init(params))
+        if start is not None:
+            state = TrainState.from_tree(
+                restore(self.ckpt_dir, start, state.tree())
+            )
+            return state, start
+        return state, 0
+
+    def run(self, key, n_steps: int, *, fail_at: int | None = None) -> dict:
+        """Runs to ``n_steps`` global steps (resuming if checkpoints exist).
+        ``fail_at`` raises mid-run to simulate preemption (tests)."""
+        state, start = self.init_or_restore(key)
+        losses = {}
+        for step in range(start, n_steps):
+            if fail_at is not None and step == fail_at:
+                self.ckpt.wait()
+                raise RuntimeError(f"simulated preemption at step {step}")
+            t0 = time.perf_counter()
+            batch = self.batch_fn(step)
+            state, metrics = self.step_fn(state, batch)
+            losses[step] = float(metrics["loss"])
+            self.monitor.record(step, time.perf_counter() - t0)
+            if (step + 1) % self.save_every == 0 or step + 1 == n_steps:
+                self.ckpt.save_async(step + 1, state.tree())
+        self.ckpt.wait()
+        return losses

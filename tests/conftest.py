@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests must see 1 device;
+multi-device tests spawn subprocesses with their own flags."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def complex_rand(rng, shape):
+    return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(
+        np.complex64
+    )

@@ -1,0 +1,176 @@
+"""Unit + property tests for the paper's 1D engine (all variants)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fft1d import (
+    bit_reversal_permutation,
+    butterfly_counts,
+    fft,
+    fft_routing_tables,
+    ifft,
+)
+
+VARIANTS = ("looped", "unrolled", "stockham")
+
+
+def _crand(rng, shape):
+    return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(
+        np.complex64
+    )
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 32, 128, 512, 2048])
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_matches_numpy(rng, n, variant):
+    x = _crand(rng, (3, n))
+    ref = np.fft.fft(x.astype(np.complex128))
+    got = np.asarray(fft(jnp.asarray(x), variant=variant))
+    scale = max(1.0, np.max(np.abs(ref)))
+    np.testing.assert_allclose(got / scale, ref / scale, atol=5e-6)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_variants_agree(rng, variant):
+    x = _crand(rng, (2, 256))
+    base = np.asarray(fft(jnp.asarray(x), variant="looped"))
+    got = np.asarray(fft(jnp.asarray(x), variant=variant))
+    np.testing.assert_allclose(got, base, atol=1e-3)
+
+
+@pytest.mark.parametrize("axis", [0, 1, 2, -1, -2])
+def test_axis_argument(rng, axis):
+    x = _crand(rng, (8, 4, 16))
+    got = np.asarray(fft(jnp.asarray(x), axis=axis))
+    ref = np.fft.fft(x, axis=axis)
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+
+
+def test_real_input_promoted(rng):
+    x = rng.standard_normal((5, 64)).astype(np.float32)
+    got = np.asarray(fft(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.fft.fft(x), atol=1e-3)
+
+
+def test_non_pow2_rejected():
+    with pytest.raises(ValueError):
+        fft(jnp.zeros((2, 12)))
+
+
+def test_jit_and_grad():
+    x = jnp.ones((2, 16), jnp.float32)
+
+    @jax.jit
+    def f(v):
+        return jnp.sum(jnp.abs(fft(v)) ** 2)
+
+    g = jax.grad(f)(x)
+    assert g.shape == x.shape and bool(jnp.isfinite(g).all())
+
+
+def test_bit_reversal_is_involution():
+    for n in (2, 8, 64, 1024):
+        p = bit_reversal_permutation(n)
+        assert (p[p] == np.arange(n)).all()
+
+
+def test_routing_tables_cover_all_positions():
+    for n in (8, 64):
+        idx_a, idx_b, tw, unperm = fft_routing_tables(n)
+        for s in range(idx_a.shape[0]):
+            union = np.sort(np.concatenate([idx_a[s], idx_b[s]]))
+            assert (union == np.arange(n)).all()
+            assert (idx_b[s] - idx_a[s] == (1 << s)).all()
+            assert (np.sort(unperm[s]) == np.arange(n)).all()
+
+
+def test_butterfly_counts_match_paper_tables():
+    # Paper Table 2: proposed N/2 BUs vs traditional (N/2)·log2N.
+    c_prop = butterfly_counts(1024, proposed=True)
+    c_trad = butterfly_counts(1024, proposed=False)
+    assert c_prop["butterfly_units"] == 512
+    assert c_trad["butterfly_units"] == 512 * 10
+    assert c_prop["adders_subtractors"] == 1024
+    assert c_trad["adders_subtractors"] == 1024 * 10
+    # eq. 5: area ratio = 1/log2 N
+    assert c_prop["butterfly_units"] / c_trad["butterfly_units"] == 1 / 10
+
+
+# ---------------- hypothesis property tests ----------------
+
+array_strategy = st.tuples(
+    st.integers(min_value=1, max_value=4),  # batch
+    st.integers(min_value=1, max_value=7),  # log2 N
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(array_strategy)
+def test_parseval(params):
+    b, logn, seed = params
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = _crand(rng, (b, n))
+    y = np.asarray(fft(jnp.asarray(x)))
+    lhs = np.sum(np.abs(x) ** 2, axis=-1)
+    rhs = np.sum(np.abs(y) ** 2, axis=-1) / n
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(array_strategy)
+def test_roundtrip(params):
+    b, logn, seed = params
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = _crand(rng, (b, n))
+    rt = np.asarray(ifft(fft(jnp.asarray(x))))
+    np.testing.assert_allclose(rt, x, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(array_strategy, st.integers(min_value=0, max_value=2**31 - 1))
+def test_linearity(params, seed2):
+    b, logn, seed = params
+    n = 1 << logn
+    r1, r2 = np.random.default_rng(seed), np.random.default_rng(seed2)
+    x, y = _crand(r1, (b, n)), _crand(r2, (b, n))
+    a = 0.7 - 0.3j
+    lhs = np.asarray(fft(jnp.asarray(a * x + y)))
+    rhs = a * np.asarray(fft(jnp.asarray(x))) + np.asarray(fft(jnp.asarray(y)))
+    np.testing.assert_allclose(lhs, rhs, atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(array_strategy)
+def test_time_shift_theorem(params):
+    b, logn, seed = params
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = _crand(rng, (b, n))
+    shift = rng.integers(0, n)
+    y_shifted = np.asarray(fft(jnp.asarray(np.roll(x, shift, axis=-1))))
+    k = np.arange(n)
+    phase = np.exp(-2j * np.pi * k * shift / n)
+    y_expected = np.asarray(fft(jnp.asarray(x))) * phase
+    np.testing.assert_allclose(y_shifted, y_expected, atol=5e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(array_strategy)
+def test_real_input_conjugate_symmetry(params):
+    b, logn, seed = params
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    y = np.asarray(fft(jnp.asarray(x)))
+    # Y[k] == conj(Y[N-k])
+    sym = np.conj(y[..., (-np.arange(n)) % n])
+    np.testing.assert_allclose(y, sym, atol=2e-3)
+    # DC bin is the plain sum.
+    np.testing.assert_allclose(y[..., 0].real, x.sum(-1), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,125 @@
+"""Pallas kernel sweeps (interpret mode) against the ref.py oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.butterfly import butterfly_stage
+from repro.kernels.fft_radix2 import fft2_fused, fft_fused, pick_row_tile
+from repro.kernels.ops import fft2_kernel, fft_kernel, fft_staged, hbm_traffic_model
+from repro.kernels.ref import dft_matmul, fft2_jnp, fft_jnp
+
+SHAPES_1D = [(1, 8), (4, 64), (16, 128), (8, 1024), (2, 4096)]
+DTYPES = [np.float32, np.float64, np.complex64]
+
+
+def _mk(rng, shape, dtype):
+    if np.issubdtype(dtype, np.complexfloating):
+        return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(
+            dtype
+        )
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES_1D)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_kernel_matches_oracle(rng, shape, dtype):
+    x = _mk(rng, shape, dtype)
+    got = np.asarray(fft_kernel(jnp.asarray(x), interpret=True))
+    ref = np.fft.fft(np.asarray(x, np.complex128))
+    scale = max(1.0, np.max(np.abs(ref)))
+    np.testing.assert_allclose(got / scale, ref / scale, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES_1D[:4])
+@pytest.mark.parametrize("dtype", [np.float32, np.complex64])
+def test_staged_kernel_matches_oracle(rng, shape, dtype):
+    x = _mk(rng, shape, dtype)
+    got = np.asarray(fft_staged(jnp.asarray(x), interpret=True))
+    ref = np.fft.fft(np.asarray(x, np.complex128))
+    scale = max(1.0, np.max(np.abs(ref)))
+    np.testing.assert_allclose(got / scale, ref / scale, atol=1e-5)
+
+
+@pytest.mark.parametrize("hw", [(8, 8), (16, 64), (64, 16), (128, 128)])
+def test_fused_2d_kernel(rng, hw):
+    x = rng.standard_normal((3, *hw)).astype(np.float32)
+    got = np.asarray(fft2_kernel(jnp.asarray(x), interpret=True))
+    ref = np.fft.fft2(x)
+    scale = max(1.0, np.max(np.abs(ref)))
+    np.testing.assert_allclose(got / scale, ref / scale, atol=1e-5)
+
+
+def test_fused_vs_dft_matmul_oracle(rng):
+    re = rng.standard_normal((4, 256)).astype(np.float32)
+    im = rng.standard_normal((4, 256)).astype(np.float32)
+    yr, yi = fft_fused(jnp.asarray(re), jnp.asarray(im), interpret=True)
+    rr, ri = dft_matmul(jnp.asarray(re), jnp.asarray(im))
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(rr), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(yi), np.asarray(ri), atol=2e-3)
+
+
+def test_oracles_agree(rng):
+    re = rng.standard_normal((2, 128)).astype(np.float32)
+    im = rng.standard_normal((2, 128)).astype(np.float32)
+    a = fft_jnp(jnp.asarray(re), jnp.asarray(im))
+    b = dft_matmul(jnp.asarray(re), jnp.asarray(im))
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), atol=1e-3)
+    r2 = rng.standard_normal((2, 16, 16)).astype(np.float32)
+    c = fft2_jnp(jnp.asarray(r2), jnp.zeros_like(jnp.asarray(r2)))
+    ref = np.fft.fft2(r2)
+    np.testing.assert_allclose(np.asarray(c[0]), ref.real, atol=1e-3)
+
+
+@pytest.mark.parametrize("stage", [0, 1, 3, 5])
+def test_single_stage_butterfly_vs_tables(rng, stage):
+    """One kernel stage == one pass of the reference routing-table stage."""
+    from repro.core.fft1d import fft_routing_tables
+
+    n = 64
+    idx_a, idx_b, tw, unperm = fft_routing_tables(n)
+    x = (rng.standard_normal((2, n)) + 1j * rng.standard_normal((2, n))).astype(
+        np.complex64
+    )
+    a = x[:, idx_a[stage]]
+    b = x[:, idx_b[stage]] * tw[stage]
+    ref = np.concatenate([a + b, a - b], axis=-1)[:, unperm[stage]]
+    got_re, got_im = butterfly_stage(
+        jnp.asarray(x.real), jnp.asarray(x.imag), stage=stage, interpret=True
+    )
+    got = np.asarray(got_re) + 1j * np.asarray(got_im)
+    np.testing.assert_allclose(got, ref, atol=1e-4)
+
+
+def test_row_tile_picker():
+    assert pick_row_tile(1024, 128) >= 1
+    t = pick_row_tile(64, 4096)
+    assert 64 % t == 0
+    # VMEM budget respected
+    assert t * 4096 * 4 * 4 <= 8 * 1024 * 1024
+
+
+def test_traffic_ratio_is_paper_alpha():
+    for n in (64, 1024, 4096):
+        ratio = hbm_traffic_model(32, n, True) / hbm_traffic_model(32, n, False)
+        assert ratio == 1 / np.log2(n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=3),
+    st.integers(min_value=3, max_value=9),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_kernel_property_sweep(b, logn, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((b, n)) + 1j * rng.standard_normal((b, n))).astype(
+        np.complex64
+    )
+    got = np.asarray(fft_kernel(jnp.asarray(x), interpret=True))
+    ref = np.fft.fft(x.astype(np.complex128))
+    scale = max(1.0, np.max(np.abs(ref)))
+    np.testing.assert_allclose(got / scale, ref / scale, atol=1e-5)

@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + finiteness (assignment deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+from repro.configs.registry import ALL_IDS, get_config, smoke_config
+from repro.models.build import build
+
+
+def _smoke_batch(cfg, rng, b=2, s=16):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.enc_frames, cfg.d_model)), jnp.float32
+        )
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_patches, cfg.d_model)), jnp.float32
+        )
+    if cfg.family == "spectral":
+        batch["targets"] = batch["tokens"]
+        batch["mlm_mask"] = jnp.ones((b, s), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
+def test_one_train_step(arch):
+    cfg = smoke_config(arch)
+    model = build(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, rng)
+
+    loss, metrics = model.loss_fn(params, batch)
+    assert np.isfinite(float(loss)), (arch, float(loss))
+
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), f"{arch}: non-finite grads"
+    # a second step with updated params still yields a finite loss
+    params2 = jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+    loss2, _ = model.loss_fn(params2, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_IDS if a != "fourier_lm"])
+def test_prefill_then_decode(arch):
+    cfg = smoke_config(arch)
+    model = build(cfg)
+    rng = np.random.default_rng(1)
+    params = model.init(jax.random.PRNGKey(1))
+    b, s = 2, 8
+    batch = _smoke_batch(cfg, rng, b, s)
+    caches = model.init_cache_fn(b, 32, jnp.float32)
+    logits, caches = model.prefill_fn(params, batch, caches)
+    assert logits.shape == (b, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, caches = model.decode_fn(params, tok, jnp.asarray(s, jnp.int32), caches)
+    assert logits2.shape == (b, cfg.vocab)
+    assert bool(jnp.isfinite(logits2).all()), arch
+
+
+@pytest.mark.parametrize(
+    "arch", ["llama3.2-3b", "mixtral-8x22b", "zamba2-2.7b", "xlstm-350m", "whisper-medium"]
+)
+def test_decode_matches_full_forward(arch):
+    """Golden test: prefill+decode logits == full-sequence forward logits."""
+    cfg = smoke_config(arch)
+    model = build(cfg)
+    rng = np.random.default_rng(2)
+    params = model.init(jax.random.PRNGKey(2))
+    b, s = 2, 8
+    batch = _smoke_batch(cfg, rng, b, s + 1)
+    full_batch = dict(batch)
+    prefix = {k: v for k, v in batch.items() if k != "tokens"}
+
+    # full forward logits at position s-? : loss path gives logits internally;
+    # recompute via prefill on the full sequence (cache big enough).
+    caches_full = model.init_cache_fn(b, 32, jnp.float32)
+    logits_full, _ = model.prefill_fn(params, full_batch, caches_full)
+
+    # prefill on s tokens, then decode token s
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :s]
+    caches = model.init_cache_fn(b, 32, jnp.float32)
+    _, caches = model.prefill_fn(params, pre, caches)
+    logits_dec, _ = model.decode_fn(
+        params, batch["tokens"][:, s : s + 1], jnp.asarray(s, jnp.int32), caches
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_full), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_full_configs_have_exact_assignment_numbers():
+    cfg = get_config("deepseek-v3-671b")
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads) == (61, 7168, 128)
+    assert cfg.moe.n_experts == 256 and cfg.moe.top_k == 8
+    assert cfg.mla.kv_lora_rank == 512 and cfg.mtp
+    cfg = get_config("mixtral-8x22b")
+    assert cfg.moe.n_experts == 8 and cfg.moe.top_k == 2 and cfg.sliding_window == 4096
+    cfg = get_config("glm4-9b")
+    assert (cfg.n_layers, cfg.d_model, cfg.n_kv_heads, cfg.d_ff) == (40, 4096, 2, 13696)
+    cfg = get_config("zamba2-2.7b")
+    assert cfg.ssm.d_state == 64 and cfg.n_layers == 54
+    cfg = get_config("internvl2-76b")
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads) == (80, 8192, 64, 8)
+    cfg = get_config("whisper-medium")
+    assert (cfg.d_model, cfg.vocab) == (1024, 51865)

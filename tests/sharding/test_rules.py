@@ -1,0 +1,109 @@
+"""Sharding rules: divisibility safety + spec structure for every arch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ALL_IDS, SHAPES, get_config
+from repro.models.build import build
+from repro.sharding.rules import batch_specs, cache_specs, dp_axes, param_rules, use_tp
+
+
+MESH_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axis_product(entry):
+    if entry is None:
+        return 1
+    axes = (entry,) if isinstance(entry, str) else entry
+    p = 1
+    for a in axes:
+        p *= MESH_SIZES[a]
+    return p
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    """Every sharded param dim must divide by its mesh-axis product."""
+    cfg = get_config(arch)
+    model = build(cfg)
+    rules = param_rules(cfg, multi_pod=multi_pod)
+    specs = model.specs(rules)
+    sds = model.abstract()
+
+    def check(s, spec):
+        for dim, entry in zip(s.shape, tuple(spec)):
+            prod = _axis_product(entry)
+            assert dim % prod == 0, (arch, s.shape, tuple(spec))
+
+    jax.tree.map(check, sds, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
+def test_param_specs_no_duplicate_axes(arch):
+    cfg = get_config(arch)
+    model = build(cfg)
+    for multi_pod in (False, True):
+        specs = model.specs(param_rules(cfg, multi_pod=multi_pod))
+
+        def check(spec):
+            flat = []
+            for entry in tuple(spec):
+                if entry is None:
+                    continue
+                flat.extend((entry,) if isinstance(entry, str) else entry)
+            assert len(flat) == len(set(flat)), spec
+
+        jax.tree.map(check, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "starcoder2-3b", "xlstm-350m"])
+def test_non_divisible_heads_use_2d_batch(arch):
+    assert not use_tp(get_config(arch))
+
+
+@pytest.mark.parametrize(
+    "arch", ["whisper-medium", "glm4-9b", "deepseek-v3-671b", "mixtral-8x22b",
+             "zamba2-2.7b", "internvl2-76b", "stablelm-12b"]
+)
+def test_divisible_heads_use_tp(arch):
+    assert use_tp(get_config(arch))
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_IDS if a != "fourier_lm"])
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape):
+    cfg = get_config(arch)
+    from repro.configs.registry import shape_skips
+
+    if shape_skips(cfg, shape):
+        pytest.skip("shape skipped per policy")
+    model = build(cfg)
+    info = SHAPES[shape]
+    caches = jax.eval_shape(
+        lambda: model.init_cache_fn(info["batch"], info["seq"], jnp.bfloat16)
+    )
+    specs = cache_specs(cfg, caches, info["batch"], multi_pod=True)
+
+    def check(s, spec):
+        for dim, entry in zip(s.shape, tuple(spec)):
+            prod = _axis_product(entry)
+            assert dim % prod == 0, (arch, shape, s.shape, tuple(spec))
+
+    jax.tree.map(check, caches, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_batch_specs_batch1_replicated():
+    cfg = get_config("xlstm-350m")
+    s = batch_specs(cfg, "decode", multi_pod=True, batch=1)
+    assert tuple(s["token"]) == (None, None)
+    s128 = batch_specs(cfg, "decode", multi_pod=True, batch=128)
+    assert s128["token"][0] == ("pod", "data")
+
+
+def test_dp_axes():
+    assert dp_axes(False) == ("data",)
+    assert dp_axes(True) == ("pod", "data")
