@@ -19,9 +19,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh
 from repro.core.distributed import fft2_pencil, fft2_pencil_overlapped, pencil_sharding
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 x = rng.standard_normal((1024, 1024)).astype(np.float32)
 xs = jax.device_put(jnp.asarray(x), pencil_sharding(mesh, "data", "rows"))

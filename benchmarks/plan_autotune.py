@@ -1,0 +1,133 @@
+"""Planner benchmark: variant="auto" vs every fixed schedule, plus cache reuse.
+
+For each frame size N the script times ``fft2`` under each fixed variant,
+MEASURE-tunes a plan for the same problem through a file-backed cache, and
+times ``variant="auto"`` (which resolves through that cache). The JSON
+report records the chosen plans, per-variant timings, speedups, and the
+cache hit/miss counters — on a second run with the same ``--cache`` file
+every plan is a hit and nothing re-tunes.
+
+  PYTHONPATH=src python benchmarks/plan_autotune.py --sizes 64,128
+  PYTHONPATH=src python benchmarks/plan_autotune.py \
+      --sizes 64,128,256,512,1024,2048,4096 --out /tmp/plan_report.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fft2d import fft2
+from repro.plan import PLAN_VARIANTS, plan_fft
+
+try:  # python -m benchmarks.plan_autotune (repo root on sys.path)
+    from benchmarks.common import time_fn
+except ImportError:  # python benchmarks/plan_autotune.py (script dir on sys.path)
+    from common import time_fn
+
+
+def _iters_for(n: int) -> int:
+    """Fewer timing reps for big frames so the 4096 sweep stays minutes."""
+    return max(3, 12 - int(np.log2(n)))
+
+
+def bench_size(n: int, cache, mode: str) -> dict:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(
+        (rng.standard_normal((n, n)) + 1j * rng.standard_normal((n, n))).astype(
+            np.complex64
+        )
+    )
+    iters = _iters_for(n)
+
+    fixed_us = {}
+    for v in PLAN_VARIANTS:
+        fn = jax.jit(functools.partial(fft2, variant=v))
+        fixed_us[v] = time_fn(fn, x, warmup=1, iters=iters)
+
+    timings = {}
+    plan = plan_fft("fft2d", (n, n), mode=mode, cache=cache,
+                    measure_iters=iters, timings_out=timings)
+
+    # variant="auto" resolves through the (now warm) cache inside the trace.
+    auto_fn = jax.jit(lambda v: fft2(v, variant="auto"))
+    auto_us = time_fn(auto_fn, x, warmup=1, iters=iters)
+
+    worst = max(fixed_us.values())
+    best = min(fixed_us.values())
+    entry = {
+        "size": n,
+        "plan": plan.to_dict(),
+        "fixed_us": {k: round(us, 2) for k, us in fixed_us.items()},
+        "auto_us": round(auto_us, 2),
+        "tune_timings_us": {k: round(us, 2) for k, us in timings.items()},
+        "speedup_vs_worst_fixed": round(worst / auto_us, 3),
+        "speedup_vs_best_fixed": round(best / auto_us, 3),
+        "auto_not_slower_than_worst": bool(auto_us <= worst),
+        "auto_matches_best_variant": plan.variant == min(fixed_us, key=fixed_us.get),
+    }
+    return entry
+
+
+def run() -> None:
+    """benchmarks.run entry point: a small sweep with the shared cache file."""
+    main(["--sizes", "64,128,256"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="64,128,256,512,1024",
+                    help="comma-separated frame sizes N (frames are NxN); "
+                         "the full paper sweep is 64..4096")
+    ap.add_argument("--mode", choices=["estimate", "measure"], default="measure")
+    ap.add_argument("--cache", default="/tmp/repro_fft_plans.json",
+                    help="plan cache file; rerun with the same file to see "
+                         "pure cache hits (no re-tune)")
+    ap.add_argument("--out", default=None, help="also write the report here")
+    args = ap.parse_args(argv)
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    # Point the process-wide default cache at the same file so the
+    # variant="auto" resolution inside fft2's trace sees the MEASURE plans
+    # tuned below (resolve() consults default_cache()).
+    from repro.plan.cache import CACHE_ENV_VAR, reset_default_cache
+
+    os.environ[CACHE_ENV_VAR] = args.cache
+    reset_default_cache()
+    from repro.plan import default_cache
+
+    cache = default_cache()
+    assert cache.path == args.cache
+    preloaded = len(cache)
+
+    entries = [bench_size(n, cache, args.mode) for n in sizes]
+
+    report = {
+        "backend": jax.default_backend(),
+        "mode": args.mode,
+        "sizes": sizes,
+        "cache_path": args.cache,
+        "cache_entries_preloaded": preloaded,
+        "cache_hits": cache.hits,
+        "cache_misses": cache.misses,
+        "retuned": cache.misses,  # 0 on a warm second run
+        "entries": entries,
+        "ok": all(e["auto_not_slower_than_worst"] for e in entries),
+    }
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

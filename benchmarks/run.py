@@ -10,8 +10,8 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import accuracy, pencil_overlap, table1_resources, table2_resources
-from benchmarks import table5_utilization, table6_delay, throughput
+from benchmarks import accuracy, pencil_overlap, plan_autotune, table1_resources
+from benchmarks import table2_resources, table5_utilization, table6_delay, throughput
 
 ALL = {
     "table1": table1_resources.run,
@@ -21,6 +21,7 @@ ALL = {
     "throughput": throughput.run,
     "accuracy": accuracy.run,
     "pencil_overlap": pencil_overlap.run,
+    "plan_autotune": plan_autotune.run,
 }
 
 

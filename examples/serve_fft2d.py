@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fft2d import fft2_stream
+from repro.plan import default_cache, plan_fft
 
 
 def frame_source(step: int, batch: int, hw: int, seed: int = 0) -> np.ndarray:
@@ -34,7 +35,25 @@ def main():
     ap.add_argument("--hw", type=int, default=128)
     ap.add_argument("--state", default="/tmp/fft2d_service_state.json")
     ap.add_argument("--reset", action="store_true")
+    ap.add_argument(
+        "--plan-mode",
+        choices=["estimate", "measure"],
+        default="measure",
+        help="autotune mode used to warm the plan cache at startup",
+    )
     args = ap.parse_args()
+
+    # Warm the plan cache before serving: tune once for the request shape so
+    # every variant="auto" resolution below is a cache hit, never a re-tune.
+    t_plan = time.time()
+    plan = plan_fft(
+        "fft2d_stream", (args.batch, args.hw, args.hw), mode=args.plan_mode
+    )
+    print(
+        f"[service] plan ({plan.mode}, {time.time() - t_plan:.2f}s): "
+        f"variant={plan.variant} unroll={plan.unroll} "
+        f"cache={default_cache().path or 'memory'}"
+    )
 
     # resume support: the service remembers which frame it served last
     start = 0
@@ -43,7 +62,7 @@ def main():
             start = json.load(f)["next_frame"]
         print(f"[service] resuming at frame {start}")
 
-    pipeline = jax.jit(lambda f: fft2_stream(f, variant="stockham"))
+    pipeline = jax.jit(lambda f: fft2_stream(f, variant="auto", unroll="auto"))
     served = 0
     t0 = time.time()
     checks = []

@@ -1,0 +1,102 @@
+"""JAX version shims.
+
+The codebase targets the modern ``jax.shard_map`` / ``jax.set_mesh`` /
+``jax.sharding.AxisType`` API; this module backfills those spellings on
+older jaxlibs (0.4.x) so the distributed paths and their tests run
+everywhere the container does.
+
+On 0.4.x the mapping is:
+
+  jax.shard_map(..., axis_names=M)  -> experimental shard_map(auto=mesh-M)
+  jax.set_mesh(mesh)                -> ``with mesh:`` resource-env context
+                                       (bare-PartitionSpec wsc works there)
+  jax.sharding.get_abstract_mesh()  -> the ambient physical mesh
+  jax.lax.pcast(x, axes, to=...)    -> identity (no varying-axis tracking)
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_MODERN = hasattr(jax, "shard_map")
+
+if _MODERN:
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+    def shard_map(f=None, *, mesh, in_specs, out_specs, axis_names=None, **kw):
+        """Translate the ``axis_names`` (manual axes) kwarg to 0.4.x's
+        complementary ``auto`` (non-manual axes) kwarg."""
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            if auto:
+                kw.setdefault("auto", auto)
+                # 0.4.x partial-manual mode cannot do replication checking
+                kw.setdefault("check_rep", False)
+        if f is None:
+            return lambda g: shard_map(
+                g, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+            )
+        return _old_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(
+            tuple(axis_shapes),
+            tuple(axis_names),
+            axis_types=(AxisType.Auto,) * len(tuple(axis_names)),
+        )
+    except (ImportError, TypeError):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context: ``jax.set_mesh`` on modern jax, the classic
+    ``with mesh:`` resource environment on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return _mesh_resource_env(mesh)
+
+
+@contextlib.contextmanager
+def _mesh_resource_env(mesh):
+    with mesh:
+        yield mesh
+
+
+def get_abstract_mesh():
+    """The mesh sharding decisions should be made against: the abstract mesh
+    on modern jax, the ambient physical mesh (possibly empty) on 0.4.x."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src.mesh import thread_resources
+
+    return thread_resources.env.physical_mesh
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` on modern jax; the psum-of-ones identity on
+    0.4.x (inside shard_map/pmap the sum of 1 over the axis is its size)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def pcast(x, axes, *, to):
+    """Varying-axis cast: real on modern jax, identity on 0.4.x (which has
+    no manual-varying tracking to satisfy)."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to=to)
+    return x
+
+
+__all__ = ["shard_map", "make_mesh", "set_mesh", "get_abstract_mesh", "axis_size", "pcast"]

@@ -17,12 +17,13 @@ Layouts (for a 1D device axis of size d):
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.fft1d import Variant, fft
 
 __all__ = ["fft2_pencil", "fft2_pencil_overlapped", "pencil_sharding"]
@@ -56,11 +57,15 @@ def fft2_pencil(
 ) -> jax.Array:
     """Distributed 2D FFT. ``x`` global (..., H, W) sharded (axis, None)."""
     d = mesh.shape[axis]
+    if variant == "auto":
+        from repro.plan.api import resolve  # lazy: plan imports core
+
+        variant = resolve("fft2d_pencil", tuple(x.shape), n_devices=d).variant
     ndim = jnp.ndim(x)
     lead = (None,) * (ndim - 2)
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=P(*lead, axis, None),
         out_specs=P(*lead, None, axis),
@@ -78,7 +83,7 @@ def fft2_pencil_overlapped(
     mesh: Mesh,
     axis: str = "data",
     variant: Variant = "looped",
-    chunks: int = 4,
+    chunks: Union[int, Literal["auto"]] = "auto",
 ) -> jax.Array:
     """Chunked pencil FFT overlapping the corner-turn with column compute.
 
@@ -86,15 +91,26 @@ def fft2_pencil_overlapped(
     data dependency on slab i−1's column FFT, so the scheduler can overlap
     collective i with compute i−1 — the ping-pong insight applied to the
     collective itself (beyond-paper optimization, see EXPERIMENTS.md §Perf).
+
+    ``chunks="auto"`` (default) and ``variant="auto"`` take their values
+    from the ``repro.plan`` plan for this ``(shape, n_devices)`` problem.
     """
     d = mesh.shape[axis]
+    if variant == "auto" or chunks == "auto":
+        from repro.plan.api import resolve  # lazy: plan imports core
+
+        plan = resolve("fft2d_pencil", tuple(x.shape), n_devices=d)
+        if variant == "auto":
+            variant = plan.variant
+        if chunks == "auto":
+            chunks = plan.chunks
     ndim = jnp.ndim(x)
     lead = (None,) * (ndim - 2)
     h, w = x.shape[-2], x.shape[-1]
     slab_w = w // chunks
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=P(*lead, axis, None),
         # (..., H, chunks, slab_w/d): slab index is a real axis so each slab's

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-Variant = Literal["looped", "unrolled", "stockham"]
+Variant = Literal["looped", "unrolled", "stockham", "auto"]
 
 __all__ = [
     "fft",
@@ -190,7 +190,11 @@ def _fft_stockham(x: jax.Array, n: int) -> jax.Array:
 
 
 def fft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
-    """Radix-2 FFT along ``axis``. Input real or complex; returns complex64."""
+    """Radix-2 FFT along ``axis``. Input real or complex; returns complex64.
+
+    ``variant="auto"`` resolves the schedule through ``repro.plan`` (cached
+    MEASURE plan if one was tuned for this shape, analytic ESTIMATE else).
+    """
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
@@ -200,6 +204,10 @@ def fft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
     if axis != x.ndim - 1:
         x = jnp.moveaxis(x, axis, -1)
     n = x.shape[-1]
+    if variant == "auto":
+        from repro.plan.api import resolve  # lazy: plan imports core
+
+        variant = resolve("fft1d", x.shape).variant
     if variant == "looped":
         y = _fft_looped(x, n)
     elif variant == "unrolled":

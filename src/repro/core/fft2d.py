@@ -15,7 +15,7 @@ buffer rotation is the scan carry.
 
 from __future__ import annotations
 
-from typing import Literal
+from typing import Literal, Union
 
 import jax
 import jax.numpy as jnp
@@ -25,13 +25,25 @@ from repro.core.fft1d import Variant, fft, ifft
 __all__ = ["fft2", "ifft2", "fft2_stream", "fftshift2"]
 
 
+def _resolve_2d(kind: str, shape, variant: Variant) -> Variant:
+    """Map ``variant="auto"`` to a concrete schedule for the whole 2D problem
+    (one plan per frame shape, not one per 1D pass)."""
+    if variant != "auto":
+        return variant
+    from repro.plan.api import resolve  # lazy: plan imports core
+
+    return resolve(kind, tuple(shape)).variant
+
+
 def fft2(x: jax.Array, variant: Variant = "looped") -> jax.Array:
     """2D FFT over the last two axes: row pass then column pass (paper fig. 1)."""
+    variant = _resolve_2d("fft2d", jnp.shape(x), variant)
     y = fft(x, axis=-1, variant=variant)   # first 1D FFT block (rows)
     return fft(y, axis=-2, variant=variant)  # second 1D FFT block (columns)
 
 
 def ifft2(x: jax.Array, variant: Variant = "looped") -> jax.Array:
+    variant = _resolve_2d("fft2d", jnp.shape(x), variant)
     y = ifft(x, axis=-1, variant=variant)
     return ifft(y, axis=-2, variant=variant)
 
@@ -44,7 +56,7 @@ def fftshift2(x: jax.Array) -> jax.Array:
 def fft2_stream(
     frames: jax.Array,
     variant: Variant = "looped",
-    unroll: int = 1,
+    unroll: Union[int, Literal["auto"]] = 1,
 ) -> jax.Array:
     """Streaming 2D FFT over ``frames[t, H, W]`` with ping-pong double buffering.
 
@@ -52,9 +64,20 @@ def fft2_stream(
     step (two concurrent engines). Output t is the 2D FFT of frame t — the
     one-frame pipeline latency is internal: a zero frame is fed through to
     drain the pipe, matching the hardware's drain cycle.
+
+    ``variant="auto"`` / ``unroll="auto"`` resolve through ``repro.plan``
+    with the stream's own problem key (the scan unroll is part of the plan).
     """
     if frames.ndim < 3:
         raise ValueError("fft2_stream expects (T, H, W) or (T, ..., H, W)")
+    if variant == "auto" or unroll == "auto":
+        from repro.plan.api import resolve  # lazy: plan imports core
+
+        plan = resolve("fft2d_stream", tuple(frames.shape))
+        if variant == "auto":
+            variant = plan.variant
+        if unroll == "auto":
+            unroll = plan.unroll
     if not jnp.issubdtype(frames.dtype, jnp.complexfloating):
         frames = frames.astype(jnp.complex64)
 

@@ -16,6 +16,7 @@ import time  # noqa: E402
 import traceback  # noqa: E402
 
 import jax  # noqa: E402
+from repro import compat
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
@@ -153,7 +154,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, overrides=None,
     step, args, shardings, meta = build_cell(
         arch, shape, mesh, multi_pod, overrides, bf16_params=bf16_params
     )
-    with jax.set_mesh(mesh), activation_sharding(
+    with compat.set_mesh(mesh), activation_sharding(
         dp=dp, dp_sizes=dp_sizes, tp=tp, tp_size=16, cp=cp, cp_size=16,
     ):
         lowered = jax.jit(step, in_shardings=shardings).lower(*args)

@@ -1,0 +1,37 @@
+"""repro.plan — FFT execution planner, autotuner, and plan cache.
+
+The software control unit: picks the 1D schedule, streaming unroll and
+pencil chunking per ``(backend, device_kind, shape, dtype, n_devices)``
+problem key, FFTW-style (ESTIMATE analytically, MEASURE by timing), and
+remembers the decision in a versioned JSON-backed cache.
+"""
+
+from repro.plan.api import execute, plan_fft, resolve
+from repro.plan.autotune import chunk_candidates, estimate_plan, measure_plan
+from repro.plan.cache import PlanCache, default_cache, reset_default_cache
+from repro.plan.plan import (
+    KINDS,
+    PLAN_SCHEMA_VERSION,
+    PLAN_VARIANTS,
+    FFTPlan,
+    ProblemKey,
+    problem_key,
+)
+
+__all__ = [
+    "FFTPlan",
+    "ProblemKey",
+    "PlanCache",
+    "KINDS",
+    "PLAN_SCHEMA_VERSION",
+    "PLAN_VARIANTS",
+    "chunk_candidates",
+    "default_cache",
+    "estimate_plan",
+    "execute",
+    "measure_plan",
+    "plan_fft",
+    "problem_key",
+    "reset_default_cache",
+    "resolve",
+]

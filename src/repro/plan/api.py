@@ -1,0 +1,111 @@
+"""Planner entry points: ``plan_fft`` / ``execute`` / ``resolve``.
+
+``plan_fft`` is the explicit front door (pick a mode, get a plan, it is
+cached — and persisted when the cache is file-backed). ``resolve`` is
+the implicit one: every ``variant="auto"`` call site in ``repro.core``
+funnels through it, so a warm cache (e.g. MEASURE plans produced at
+service startup or by ``benchmarks/plan_autotune.py``) steers the hot
+path while a cold cache falls back to the analytic ESTIMATE model —
+never a timed sweep, because ``resolve`` may run inside a jit trace.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.plan.autotune import estimate_plan, measure_plan
+from repro.plan.cache import PlanCache, default_cache
+from repro.plan.plan import FFTPlan, ProblemKey, problem_key
+
+__all__ = ["plan_fft", "execute", "resolve"]
+
+
+def plan_fft(
+    kind: str,
+    shape: Tuple[int, ...],
+    dtype: str = "complex64",
+    mode: str = "estimate",
+    n_devices: int = 1,
+    cache: Optional[PlanCache] = None,
+    force: bool = False,
+    measure_iters: int = 5,
+    timings_out: Optional[Dict[str, float]] = None,
+) -> FFTPlan:
+    """Plan one FFT problem; consult the cache first unless ``force``.
+
+    ``mode="estimate"`` is analytic and instant; ``mode="measure"`` jits
+    and times every candidate schedule (pencil problems stay analytic —
+    timing them needs a live mesh). A MEASURE result replaces a cached
+    ESTIMATE plan for the same key. File-backed caches are saved after
+    every new plan so a second process re-tunes nothing.
+    """
+    if mode not in ("estimate", "measure"):
+        raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
+    cache = cache if cache is not None else default_cache()
+    key = problem_key(kind, shape, dtype, n_devices)
+    # Pencil problems can't be timed without a live mesh: the best we can do
+    # is the analytic model, so a cached ESTIMATE plan already is the answer.
+    effective_mode = "estimate" if kind == "fft2d_pencil" else mode
+    if not force:
+        hit = cache.get(key)
+        if hit is not None and (effective_mode == "estimate" or hit.mode == "measure"):
+            return hit
+    if effective_mode == "measure":
+        plan = measure_plan(key, iters=measure_iters, timings_out=timings_out)
+    else:
+        plan = estimate_plan(key)
+    cache.put(plan)
+    if cache.path:
+        cache.save()
+    return plan
+
+
+def resolve(
+    kind: str,
+    shape: Tuple[int, ...],
+    dtype: str = "complex64",
+    n_devices: int = 1,
+    cache: Optional[PlanCache] = None,
+) -> FFTPlan:
+    """Cheap plan lookup for ``variant="auto"`` call sites (trace-safe).
+
+    Cache hit -> the cached (possibly MEASURE) plan; miss -> ESTIMATE,
+    which is pure Python on analytic counts and therefore safe to run
+    while JAX is tracing the surrounding computation.
+    """
+    cache = cache if cache is not None else default_cache()
+    key = problem_key(kind, shape, dtype, n_devices)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    return cache.put(estimate_plan(key))
+
+
+def execute(plan: FFTPlan, x, mesh=None, axis: str = "data"):
+    """Run ``x`` through the transform ``plan`` was made for.
+
+    Pencil plans need the ``mesh`` (and device-axis name) the plan's
+    ``n_devices`` refers to.
+    """
+    kind = plan.key.kind
+    if kind == "fft1d":
+        from repro.core.fft1d import fft
+
+        return fft(x, variant=plan.variant)
+    if kind == "fft2d":
+        from repro.core.fft2d import fft2
+
+        return fft2(x, variant=plan.variant)
+    if kind == "fft2d_stream":
+        from repro.core.fft2d import fft2_stream
+
+        return fft2_stream(x, variant=plan.variant, unroll=plan.unroll)
+    if kind == "fft2d_pencil":
+        if mesh is None:
+            raise ValueError("execute() needs mesh=... for a pencil plan")
+        from repro.core.distributed import fft2_pencil_overlapped
+
+        return fft2_pencil_overlapped(
+            x, mesh, axis=axis, variant=plan.variant, chunks=plan.chunks
+        )
+    raise ValueError(f"plan has unknown kind {kind!r}")

@@ -1,0 +1,259 @@
+"""FFTW-style planning modes: analytic ESTIMATE and timed MEASURE.
+
+ESTIMATE builds a roofline model per candidate schedule from the paper's
+analytic resource counts (``butterfly_counts``: (N/2)·log2 N butterfly
+passes) plus per-variant memory-traffic factors, and adds small
+per-stage dispatch overheads that differentiate the schedules where the
+roofline terms tie:
+
+  * ``looped``   — fori_loop stages run strictly sequentially and each
+                   stage is a gather/concat/gather round-trip.
+  * ``unrolled`` — same traffic, but XLA sees all stages at once and can
+                   fuse across them; lowest per-stage overhead.
+  * ``stockham`` — autosort: no bit-reversal gather and contiguous
+                   reshapes only, so ~2/3 of the per-stage traffic.
+
+The crossover this produces — ``unrolled`` for overhead-dominated small
+transforms, ``stockham`` once bandwidth dominates — matches what MEASURE
+finds on CPU and TPU for this repo's engines.
+
+MEASURE jits every candidate, times it (median of several runs, first
+call discarded so compile time never pollutes the comparison) and keeps
+the argmin, exactly like FFTW's planner running real candidates.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.fft1d import butterfly_counts
+from repro.launch.roofline import Roofline
+from repro.plan.plan import PLAN_VARIANTS, FFTPlan, ProblemKey
+
+__all__ = ["estimate_plan", "measure_plan", "chunk_candidates"]
+
+# Real FLOPs per butterfly pass: one complex multiply (6) + two complex
+# add/sub (4) — the multiplier + 2 adders of the paper's butterfly unit.
+_FLOPS_PER_BUTTERFLY = 10.0
+
+# Bytes of HBM traffic per element per stage (complex64 = 8 B), per variant.
+# looped/unrolled: gather a, gather b, write top/bot concat, gather unperm
+# write-back -> ~6 element-touches; stockham: read + twiddle-mul + two
+# contiguous writes -> ~4.
+_TRAFFIC_FACTOR = {"looped": 6.0, "unrolled": 6.0, "stockham": 4.0}
+
+# Per-stage dispatch overhead (seconds): sequential fori_loop iterations
+# cannot fuse; unrolled fuses best; stockham pays for reshape/concat.
+_STAGE_OVERHEAD_S = {"looped": 3.0e-6, "unrolled": 0.5e-6, "stockham": 0.8e-6}
+
+# Fixed cost of entering a fori_loop with carried state (the register array).
+_LOOP_ENTRY_S = 5.0e-6
+
+# CPU backends sit far off the TPU roofline constants; only the *ranking*
+# matters for planning, but scaling keeps est_time_s roughly honest.
+_BACKEND_SLOWDOWN = {"cpu": 40.0}
+
+
+def _transform_geometry(key: ProblemKey) -> Tuple[int, int, int]:
+    """(n, rows_per_frame, n_transforms_total) for the 1D passes of ``key``.
+
+    2D kinds do a length-W pass over H rows and a length-H pass over W
+    columns; we model the dominant cost with the last-axis length and
+    total 1D transforms across both passes.
+    """
+    shape = key.shape
+    if key.kind == "fft1d":
+        n = shape[-1]
+        batch = int(np.prod(shape[:-1], dtype=np.int64)) if len(shape) > 1 else 1
+        return n, 1, max(batch, 1)
+    h, w = shape[-2], shape[-1]
+    lead = int(np.prod(shape[:-2], dtype=np.int64)) if len(shape) > 2 else 1
+    # rows pass: lead*h transforms of length w; cols pass: lead*w of length h.
+    # Use the geometric-mean length so non-square frames aren't mismodelled.
+    n = int(2 ** round((math.log2(w) + math.log2(h)) / 2))
+    return n, h, max(lead, 1) * (h + w)
+
+
+def estimate_variant_time(key: ProblemKey, variant: str) -> float:
+    """Roofline-model execution time (seconds) of one call under ``variant``."""
+    n, _, n_transforms = _transform_geometry(key)
+    counts = butterfly_counts(n, proposed=True)
+    stages = counts["stages"]
+    # (N/2)·log2 N butterfly passes per transform (paper Tables 1 & 2).
+    flops = _FLOPS_PER_BUTTERFLY * counts["butterfly_units"] * stages * n_transforms
+    traffic = _TRAFFIC_FACTOR[variant] * 8.0 * n * stages * n_transforms
+    # Pencil kind: the corner-turn moves each element once across the mesh.
+    collective = 0.0
+    if key.kind == "fft2d_pencil" and key.n_devices > 1:
+        collective = 8.0 * float(np.prod(key.shape, dtype=np.int64)) / key.n_devices
+    rl = Roofline(
+        flops_per_device=flops / key.n_devices,
+        bytes_per_device=traffic / key.n_devices,
+        collective_bytes_per_device=collective,
+        n_devices=key.n_devices,
+        model_flops_global=flops,
+    )
+    t = rl.step_time_s * _BACKEND_SLOWDOWN.get(key.backend, 1.0)
+    t += stages * _STAGE_OVERHEAD_S[variant]
+    if variant == "looped":
+        t += _LOOP_ENTRY_S
+    return t
+
+
+def chunk_candidates(w: int, n_devices: int, limit: int = 16) -> List[int]:
+    """Legal corner-turn slab counts: c | W and d | (W/c)."""
+    out = [c for c in range(1, limit + 1)
+           if w % c == 0 and (w // c) % max(n_devices, 1) == 0]
+    return out or [1]
+
+
+def _estimate_chunks(key: ProblemKey) -> int:
+    """Pick the slab count that best overlaps all_to_all with column FFTs.
+
+    Ideal chunking splits the collective into enough slabs that slab i's
+    exchange hides behind slab i-1's butterflies; past that, smaller
+    slabs just pay more launch latency. We size c ~ collective/compute
+    and clamp to the legal divisors.
+    """
+    w = key.shape[-1]
+    cands = chunk_candidates(w, key.n_devices)
+    if len(cands) == 1:
+        return cands[0]
+    compute_s = estimate_variant_time(
+        ProblemKey(
+            kind="fft2d",
+            backend=key.backend,
+            device_kind=key.device_kind,
+            shape=key.shape,
+            dtype=key.dtype,
+            n_devices=key.n_devices,
+        ),
+        "stockham",
+    )
+    from repro.launch.roofline import ICI_LINK_BW
+
+    collective_s = 8.0 * float(np.prod(key.shape, dtype=np.int64)) / (
+        key.n_devices * ICI_LINK_BW
+    )
+    ideal = max(1.0, collective_s / max(compute_s, 1e-12))
+    # Closest legal slab count to the overlap ideal; ties favour more slabs.
+    return min(cands, key=lambda c: (abs(c - ideal), -c))
+
+
+def _estimate_unroll(key: ProblemKey) -> int:
+    """Streaming scan unroll: unroll short pipelines over small frames so
+    XLA can interleave frame k's rows with frame k-1's columns across scan
+    iterations too; long streams / big frames keep the compact loop."""
+    if key.kind != "fft2d_stream" or len(key.shape) < 3:
+        return 1
+    t = key.shape[0]
+    frame_elems = key.shape[-2] * key.shape[-1]
+    if t >= 2 and frame_elems <= 128 * 128:
+        return 2
+    return 1
+
+
+def estimate_plan(key: ProblemKey) -> FFTPlan:
+    """Analytic (FFTW ``ESTIMATE``) plan: no device work, microseconds."""
+    times = {v: estimate_variant_time(key, v) for v in PLAN_VARIANTS}
+    variant = min(times, key=times.get)
+    return FFTPlan(
+        key=key,
+        variant=variant,
+        unroll=_estimate_unroll(key),
+        chunks=_estimate_chunks(key) if key.kind == "fft2d_pencil" else 1,
+        mode="estimate",
+        est_time_s=times[variant],
+    )
+
+
+# ------------------------------- MEASURE ---------------------------------
+
+
+def _time_us(fn: Callable, x, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (first call = compile)."""
+    import jax
+
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(x))
+    samples = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2] * 1e6
+
+
+def _measure_input(key: ProblemKey, seed: int = 0):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    x = (
+        rng.standard_normal(key.shape) + 1j * rng.standard_normal(key.shape)
+    ).astype(np.complex64)
+    return jnp.asarray(x)
+
+
+def _candidate_runners(key: ProblemKey) -> Dict[Tuple[str, int], Callable]:
+    """(variant, unroll) -> jitted callable for this problem kind."""
+    import functools
+
+    import jax
+
+    from repro.core.fft1d import fft
+    from repro.core.fft2d import fft2, fft2_stream
+
+    runners: Dict[Tuple[str, int], Callable] = {}
+    for v in PLAN_VARIANTS:
+        if key.kind == "fft1d":
+            runners[(v, 1)] = jax.jit(functools.partial(fft, variant=v))
+        elif key.kind == "fft2d":
+            runners[(v, 1)] = jax.jit(functools.partial(fft2, variant=v))
+        elif key.kind == "fft2d_stream":
+            for u in (1, 2):
+                runners[(v, u)] = jax.jit(
+                    functools.partial(fft2_stream, variant=v, unroll=u)
+                )
+        else:
+            raise ValueError(
+                f"MEASURE planning for kind {key.kind!r} needs a device mesh; "
+                "use mode='estimate' (the pencil chunk model) instead"
+            )
+    return runners
+
+
+def measure_plan(
+    key: ProblemKey,
+    warmup: int = 1,
+    iters: int = 5,
+    timings_out: Optional[Dict[str, float]] = None,
+) -> FFTPlan:
+    """Timed candidate sweep (FFTW ``MEASURE``): jit + run every schedule.
+
+    ``timings_out`` (optional dict) receives per-candidate medians in µs,
+    keyed ``"variant"`` or ``"variant/unroll=k"`` — benchmarks report it.
+    """
+    x = _measure_input(key)
+    best: Optional[Tuple[Tuple[str, int], float]] = None
+    for (variant, unroll), fn in _candidate_runners(key).items():
+        us = _time_us(fn, x, warmup=warmup, iters=iters)
+        label = variant if unroll == 1 else f"{variant}/unroll={unroll}"
+        if timings_out is not None:
+            timings_out[label] = us
+        if best is None or us < best[1]:
+            best = ((variant, unroll), us)
+    (variant, unroll), us = best
+    return FFTPlan(
+        key=key,
+        variant=variant,
+        unroll=unroll,
+        chunks=1,
+        mode="measure",
+        est_time_s=estimate_variant_time(key, variant),
+        measured_us=us,
+    )

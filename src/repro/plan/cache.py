@@ -1,0 +1,139 @@
+"""Plan cache: in-memory map with versioned JSON on-disk persistence.
+
+FFTW's wisdom files are the precedent: tuning is expensive (MEASURE jits
+and times every candidate), so the result is remembered per problem key.
+Keys embed :data:`repro.plan.plan.PLAN_SCHEMA_VERSION`, so bumping the
+schema orphans stale entries instead of mis-deserialising them — load
+simply drops keys whose version prefix doesn't match.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Optional
+
+from repro.plan.plan import PLAN_SCHEMA_VERSION, FFTPlan, ProblemKey
+
+__all__ = ["PlanCache", "default_cache", "reset_default_cache"]
+
+#: Environment variable naming the on-disk cache file for the process-wide
+#: default cache. Unset -> the default cache is memory-only.
+CACHE_ENV_VAR = "REPRO_PLAN_CACHE"
+
+_FILE_FORMAT = 1
+
+
+class PlanCache:
+    """Maps ``ProblemKey.cache_key()`` strings to :class:`FFTPlan`.
+
+    ``path`` (optional) backs the cache with a JSON file: it is loaded at
+    construction and rewritten atomically by :meth:`save`. Hit/miss
+    counters let benchmarks assert "second run re-tunes nothing".
+    """
+
+    def __init__(self, path: Optional[str] = None, autoload: bool = True):
+        self._plans: Dict[str, FFTPlan] = {}
+        self.path = path
+        self.hits = 0
+        self.misses = 0
+        if path and autoload and os.path.exists(path):
+            self.load(path)
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key: ProblemKey) -> bool:
+        return key.cache_key() in self._plans
+
+    def get(self, key: ProblemKey) -> Optional[FFTPlan]:
+        plan = self._plans.get(key.cache_key())
+        if plan is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return plan
+
+    def put(self, plan: FFTPlan) -> FFTPlan:
+        self._plans[plan.key.cache_key()] = plan
+        return plan
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------ persistence ------------------------------
+
+    def save(self, path: Optional[str] = None) -> str:
+        """Atomically write all plans to ``path`` (default: ``self.path``)."""
+        path = path or self.path
+        if not path:
+            raise ValueError("PlanCache.save needs a path (none configured)")
+        payload = {
+            "file_format": _FILE_FORMAT,
+            "plan_schema_version": PLAN_SCHEMA_VERSION,
+            "plans": {k: p.to_dict() for k, p in self._plans.items()},
+        }
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+
+    def load(self, path: Optional[str] = None) -> int:
+        """Merge plans from ``path``; returns how many entries were kept.
+
+        Entries from other schema versions (key prefix mismatch) and
+        malformed entries are silently dropped — a cache is a cache.
+        """
+        path = path or self.path
+        if not path:
+            raise ValueError("PlanCache.load needs a path (none configured)")
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return 0
+        prefix = f"v{PLAN_SCHEMA_VERSION}|"
+        kept = 0
+        for key, plan_dict in payload.get("plans", {}).items():
+            if not key.startswith(prefix):
+                continue
+            try:
+                plan = FFTPlan.from_dict(plan_dict)
+            except (KeyError, TypeError, ValueError):
+                continue
+            if plan.key.cache_key() != key:
+                continue  # key/value disagree — do not trust the entry
+            self._plans[key] = plan
+            kept += 1
+        return kept
+
+
+_DEFAULT: Optional[PlanCache] = None
+
+
+def default_cache() -> PlanCache:
+    """Process-wide cache used by ``variant="auto"`` resolution.
+
+    Backed by the file named in ``$REPRO_PLAN_CACHE`` when set, else
+    memory-only.
+    """
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = PlanCache(path=os.environ.get(CACHE_ENV_VAR) or None)
+    return _DEFAULT
+
+
+def reset_default_cache() -> None:
+    """Drop the process-wide cache (tests; or after changing the env var)."""
+    global _DEFAULT
+    _DEFAULT = None

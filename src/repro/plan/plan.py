@@ -1,0 +1,161 @@
+"""Plan objects: the software rendition of the paper's control unit.
+
+The paper's 2D processor owes its area savings to a *control unit* that
+schedules a small pool of butterfly units across stages, and a *RAM
+controller* that sequences the two 1D engines through the ping-pong
+buffers. In software the analogous decisions — which 1D schedule
+(``looped`` / ``unrolled`` / ``stockham``), how far to unroll the
+streaming scan, how many slabs to chunk the pencil corner-turn into —
+are made *per problem*, keyed by backend, device kind, shape, dtype and
+device count. An :class:`FFTPlan` freezes one such decision set; the
+autotuner (``repro.plan.autotune``) produces plans and the cache
+(``repro.plan.cache``) remembers them across calls and processes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+#: Bumped whenever plan semantics change; embedded in every cache key so a
+#: stale on-disk cache can never hand an old-format plan to new code.
+PLAN_SCHEMA_VERSION = 1
+
+#: Problem kinds the planner understands.
+KINDS = ("fft1d", "fft2d", "fft2d_stream", "fft2d_pencil")
+
+#: Concrete 1D schedules a plan may select (never "auto").
+PLAN_VARIANTS = ("looped", "unrolled", "stockham")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemKey:
+    """Identity of one FFT problem: what the control unit dispatches on.
+
+    ``shape`` is the concrete array shape seen by the entry point (for
+    ``fft1d`` the transform axis is last; for 2D kinds the trailing two
+    axes are H, W; for ``fft2d_stream`` the leading axis is time).
+    """
+
+    kind: str                  # one of KINDS
+    backend: str               # jax.default_backend(): "cpu" | "gpu" | "tpu"
+    device_kind: str           # e.g. "TPU v5e", "cpu"
+    shape: Tuple[int, ...]
+    dtype: str                 # canonical dtype name, e.g. "complex64"
+    n_devices: int = 1
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown problem kind {self.kind!r}; want one of {KINDS}")
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+
+    def cache_key(self) -> str:
+        """Stable, versioned string key for the plan cache."""
+        shape = "x".join(str(s) for s in self.shape)
+        return (
+            f"v{PLAN_SCHEMA_VERSION}|{self.kind}|{self.backend}|{self.device_kind}"
+            f"|{shape}|{self.dtype}|d{self.n_devices}"
+        )
+
+    def to_dict(self) -> dict:
+        return {
+            "kind": self.kind,
+            "backend": self.backend,
+            "device_kind": self.device_kind,
+            "shape": list(self.shape),
+            "dtype": self.dtype,
+            "n_devices": self.n_devices,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ProblemKey":
+        return cls(
+            kind=d["kind"],
+            backend=d["backend"],
+            device_kind=d["device_kind"],
+            shape=tuple(d["shape"]),
+            dtype=d["dtype"],
+            n_devices=int(d["n_devices"]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTPlan:
+    """One frozen scheduling decision for a :class:`ProblemKey`.
+
+    Fields beyond ``variant`` exist so later PRs (sharding, batching,
+    multi-backend) plug into the same decision point instead of growing
+    new keyword arguments on every entry point:
+
+      axis_order  — pass order for separable 2D transforms; ``(-1, -2)``
+                    is rows-then-columns (paper fig. 1).
+      precision   — accumulation dtype policy (the paper engine is c64).
+      unroll      — ``lax.scan`` unroll for the streaming pipeline.
+      chunks      — corner-turn slab count for the overlapped pencil path.
+    """
+
+    key: ProblemKey
+    variant: str                       # concrete member of PLAN_VARIANTS
+    axis_order: Tuple[int, ...] = (-1, -2)
+    precision: str = "complex64"
+    unroll: int = 1
+    chunks: int = 1
+    mode: str = "estimate"             # "estimate" | "measure"
+    est_time_s: float = 0.0            # roofline-model time (ESTIMATE)
+    measured_us: Optional[float] = None  # winning candidate time (MEASURE)
+
+    def __post_init__(self):
+        if self.variant not in PLAN_VARIANTS:
+            raise ValueError(
+                f"plan variant must be concrete, got {self.variant!r} "
+                f"(want one of {PLAN_VARIANTS})"
+            )
+        if self.unroll < 1 or self.chunks < 1:
+            raise ValueError("unroll and chunks must be >= 1")
+
+    def to_dict(self) -> dict:
+        return {
+            "key": self.key.to_dict(),
+            "variant": self.variant,
+            "axis_order": list(self.axis_order),
+            "precision": self.precision,
+            "unroll": self.unroll,
+            "chunks": self.chunks,
+            "mode": self.mode,
+            "est_time_s": self.est_time_s,
+            "measured_us": self.measured_us,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FFTPlan":
+        return cls(
+            key=ProblemKey.from_dict(d["key"]),
+            variant=d["variant"],
+            axis_order=tuple(d["axis_order"]),
+            precision=d["precision"],
+            unroll=int(d["unroll"]),
+            chunks=int(d["chunks"]),
+            mode=d["mode"],
+            est_time_s=float(d["est_time_s"]),
+            measured_us=None if d.get("measured_us") is None else float(d["measured_us"]),
+        )
+
+
+def problem_key(
+    kind: str,
+    shape: Tuple[int, ...],
+    dtype: str = "complex64",
+    n_devices: int = 1,
+) -> ProblemKey:
+    """Build a :class:`ProblemKey` for the *current* JAX backend/device."""
+    import jax
+
+    devices = jax.devices()
+    return ProblemKey(
+        kind=kind,
+        backend=jax.default_backend(),
+        device_kind=devices[0].device_kind if devices else "unknown",
+        shape=tuple(shape),
+        dtype=str(dtype),
+        n_devices=int(n_devices),
+    )

@@ -14,6 +14,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import tempfile
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.checkpoint import restore_resharded, save
 from repro.configs.registry import smoke_config
 from repro.models.build import build
@@ -24,8 +25,7 @@ model = build(cfg)
 params = model.init(jax.random.PRNGKey(0))
 
 # "cluster A": 8-way data mesh
-mesh_a = jax.make_mesh((8, 1), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_a = make_mesh((8, 1), ("data", "model"))
 rules = param_rules(cfg, multi_pod=False, model_size=1)
 specs = model.specs(rules)
 named_a = jax.tree.map(lambda s: NamedSharding(mesh_a, s), specs,
@@ -36,8 +36,7 @@ d = tempfile.mkdtemp()
 save(d, 42, params_a)
 
 # "cluster B": shrunk to 2-way data x 4 model
-mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_b = make_mesh((2, 4), ("data", "model"))
 named_b = jax.tree.map(lambda s: NamedSharding(mesh_b, s), specs,
                        is_leaf=lambda x: isinstance(x, P))
 restored = restore_resharded(d, 42, params, named_b)

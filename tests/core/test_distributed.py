@@ -11,9 +11,10 @@ _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.core.distributed import fft2_pencil, fft2_pencil_overlapped, pencil_sharding
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 rng = np.random.default_rng(7)
 
 # sharded input, plain + overlapped variants, batched too
@@ -26,6 +27,14 @@ for fn, kw in ((fft2_pencil, {}), (fft2_pencil_overlapped, {"chunks": 4}),
     got = np.asarray(fn(xs, mesh, **kw))
     err = np.max(np.abs(got - ref)) / scale
     assert err < 1e-5, (fn.__name__, kw, err)
+
+# planner integration: variant/chunks resolved through repro.plan
+from repro.plan import default_cache, problem_key
+got = np.asarray(fft2_pencil_overlapped(xs, mesh, variant="auto", chunks="auto"))
+assert np.max(np.abs(got - ref)) / scale < 1e-5, "auto pencil mismatch"
+plan = default_cache().get(problem_key("fft2d_pencil", (64, 32), n_devices=8))
+assert plan is not None and plan.variant in ("looped", "unrolled", "stockham")
+assert 32 % plan.chunks == 0 and (32 // plan.chunks) % 8 == 0, plan.chunks
 
 xb = rng.standard_normal((3, 64, 64)).astype(np.float32)
 gb = np.asarray(fft2_pencil(jnp.asarray(xb), mesh))

@@ -46,6 +46,31 @@ def test_stream_batched_frames(rng):
     np.testing.assert_allclose(got, np.fft.fft2(frames), atol=1e-4)
 
 
+@pytest.mark.parametrize("unroll", [2, 4])
+def test_stream_unrolled_scan_matches(rng, unroll):
+    """Unrolling the ping-pong scan must not change the pipeline semantics,
+    including when T is not a multiple of the unroll factor."""
+    frames = rng.standard_normal((7, 16, 16)).astype(np.float32)
+    ref = np.fft.fft2(frames)
+    scale = max(1.0, np.max(np.abs(ref)))
+    got = np.asarray(fft2_stream(jnp.asarray(frames), unroll=unroll))
+    np.testing.assert_allclose(got / scale, ref / scale, atol=1e-5)
+    base = np.asarray(fft2_stream(jnp.asarray(frames), unroll=1))
+    np.testing.assert_allclose(got, base, atol=1e-6)
+
+
+def test_stream_auto_plan(rng):
+    """variant="auto"/unroll="auto" resolve through repro.plan and stay exact."""
+    frames = rng.standard_normal((4, 8, 8)).astype(np.float32)
+    got = np.asarray(fft2_stream(jnp.asarray(frames), variant="auto", unroll="auto"))
+    np.testing.assert_allclose(got, np.fft.fft2(frames), atol=1e-4)
+
+    from repro.plan import default_cache, problem_key
+
+    plan = default_cache().get(problem_key("fft2d_stream", (4, 8, 8)))
+    assert plan is not None and plan.unroll >= 1
+
+
 def test_fftshift2_centers_dc(rng):
     x = jnp.ones((8, 8), jnp.float32)  # all energy in DC bin
     y = np.asarray(fftshift2(fft2(x)))

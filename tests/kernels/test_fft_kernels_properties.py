@@ -1,0 +1,32 @@
+"""Hypothesis sweep of the fused Pallas FFT kernel (interpret mode).
+
+Guarded with importorskip: skips when hypothesis is not installed."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.kernels.ops import fft_kernel  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=3),
+    st.integers(min_value=3, max_value=9),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_kernel_property_sweep(b, logn, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((b, n)) + 1j * rng.standard_normal((b, n))).astype(
+        np.complex64
+    )
+    got = np.asarray(fft_kernel(jnp.asarray(x), interpret=True))
+    ref = np.fft.fft(x.astype(np.complex128))
+    scale = max(1.0, np.max(np.abs(ref)))
+    np.testing.assert_allclose(got / scale, ref / scale, atol=1e-5)

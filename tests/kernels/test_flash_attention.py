@@ -1,10 +1,11 @@
-"""Pallas flash-attention kernel vs the naive oracle (interpret mode)."""
+"""Pallas flash-attention kernel vs the naive oracle (interpret mode).
+
+Hypothesis property sweeps live in test_flash_attention_properties.py so
+this module collects even when hypothesis is not installed."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.kernels.flash_attention import flash_attention_fwd, mha_reference
 
@@ -48,23 +49,3 @@ def test_flash_agrees_with_model_flash(rng):
                               interpret=True)
     pal = jnp.moveaxis(pal.reshape(b, h, s, d), 1, 2)
     np.testing.assert_allclose(np.asarray(pal), np.asarray(xla), atol=2e-5)
-
-
-@settings(max_examples=15, deadline=None)
-@given(
-    st.integers(min_value=1, max_value=3),
-    st.integers(min_value=4, max_value=7),
-    st.integers(min_value=3, max_value=5),
-    st.booleans(),
-    st.integers(min_value=0, max_value=2**31 - 1),
-)
-def test_flash_property_sweep(bh, log_s, log_d, causal, seed):
-    s, d = 1 << log_s, 1 << log_d
-    rng = np.random.default_rng(seed)
-    q = jnp.asarray(rng.standard_normal((bh, s, d)), jnp.float32)
-    k = jnp.asarray(rng.standard_normal((bh, s, d)), jnp.float32)
-    v = jnp.asarray(rng.standard_normal((bh, s, d)), jnp.float32)
-    got = flash_attention_fwd(q, k, v, causal=causal, block_q=16, block_k=16,
-                              interpret=True)
-    ref = mha_reference(q, k, v, causal=causal)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-5)

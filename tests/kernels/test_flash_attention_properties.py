@@ -1,0 +1,37 @@
+"""Hypothesis sweep of the Pallas flash-attention kernel (interpret mode).
+
+Guarded with importorskip: skips when hypothesis is not installed."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.kernels.flash_attention import (  # noqa: E402
+    flash_attention_fwd,
+    mha_reference,
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=3),
+    st.integers(min_value=4, max_value=7),
+    st.integers(min_value=3, max_value=5),
+    st.booleans(),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_flash_property_sweep(bh, log_s, log_d, causal, seed):
+    s, d = 1 << log_s, 1 << log_d
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((bh, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, s, d)), jnp.float32)
+    got = flash_attention_fwd(q, k, v, causal=causal, block_q=16, block_k=16,
+                              interpret=True)
+    ref = mha_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-5)

@@ -1,0 +1,131 @@
+"""Plan cache: round-trip, persistence, key versioning, hit/miss counters."""
+
+import json
+
+import pytest
+
+from repro.plan import (
+    PLAN_SCHEMA_VERSION,
+    FFTPlan,
+    PlanCache,
+    ProblemKey,
+)
+
+
+def _key(shape=(64, 64), kind="fft2d", n_devices=1):
+    return ProblemKey(
+        kind=kind,
+        backend="cpu",
+        device_kind="cpu",
+        shape=shape,
+        dtype="complex64",
+        n_devices=n_devices,
+    )
+
+
+def _plan(key=None, variant="stockham", **kw):
+    return FFTPlan(key=key or _key(), variant=variant, **kw)
+
+
+def test_put_get_roundtrip():
+    cache = PlanCache()
+    plan = _plan()
+    assert cache.get(plan.key) is None
+    cache.put(plan)
+    assert cache.get(plan.key) == plan
+    assert len(cache) == 1
+    # distinct shape -> distinct key -> miss
+    assert cache.get(_key(shape=(128, 128))) is None
+
+
+def test_hit_miss_counters():
+    cache = PlanCache()
+    plan = _plan()
+    cache.get(plan.key)
+    cache.put(plan)
+    cache.get(plan.key)
+    cache.get(plan.key)
+    assert cache.misses == 1 and cache.hits == 2
+    cache.clear()
+    assert len(cache) == 0 and cache.hits == 0 and cache.misses == 0
+
+
+def test_persist_and_reload(tmp_path):
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path=path)
+    plans = [
+        _plan(_key(shape=(64, 64))),
+        _plan(_key(shape=(4, 256), kind="fft1d"), variant="unrolled"),
+        _plan(_key(shape=(8, 32, 32), kind="fft2d_stream"), unroll=2,
+              mode="measure", measured_us=123.4),
+        _plan(_key(shape=(64, 32), kind="fft2d_pencil", n_devices=8), chunks=4),
+    ]
+    for p in plans:
+        cache.put(p)
+    cache.save()
+
+    fresh = PlanCache(path=path)  # autoload
+    assert len(fresh) == len(plans)
+    for p in plans:
+        got = fresh.get(p.key)
+        assert got == p
+    # full field fidelity through JSON for the measured plan
+    m = fresh.get(plans[2].key)
+    assert m.mode == "measure" and m.measured_us == pytest.approx(123.4)
+    assert m.unroll == 2
+
+
+def test_stale_schema_version_dropped(tmp_path):
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path=path)
+    cache.put(_plan())
+    cache.save()
+
+    # Rewrite the file as if produced by an older plan schema.
+    with open(path) as f:
+        payload = json.load(f)
+    old = {}
+    for key, plan in payload["plans"].items():
+        assert key.startswith(f"v{PLAN_SCHEMA_VERSION}|")
+        old_key = "v0|" + key.split("|", 1)[1]
+        old[old_key] = plan
+    payload["plans"] = old
+    payload["plan_schema_version"] = 0
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+    fresh = PlanCache(path=path)
+    assert len(fresh) == 0  # stale entries orphaned, not mis-read
+
+
+def test_corrupt_cache_file_ignored(tmp_path):
+    path = str(tmp_path / "plans.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    cache = PlanCache(path=path)  # must not raise
+    assert len(cache) == 0
+    # tampered key/value mismatch is dropped too
+    good = PlanCache(path=str(tmp_path / "ok.json"))
+    p = _plan()
+    good.put(p)
+    good.save()
+    with open(good.path) as f:
+        payload = json.load(f)
+    (key,) = payload["plans"]
+    payload["plans"][key]["key"]["shape"] = [128, 128]  # lies about its key
+    with open(good.path, "w") as f:
+        json.dump(payload, f)
+    assert PlanCache(path=good.path)._plans == {}
+
+
+def test_plan_rejects_auto_variant():
+    with pytest.raises(ValueError):
+        FFTPlan(key=_key(), variant="auto")
+
+
+def test_cache_key_embeds_all_dimensions():
+    base = _key().cache_key()
+    assert base.startswith(f"v{PLAN_SCHEMA_VERSION}|")
+    assert _key(shape=(32, 32)).cache_key() != base
+    assert _key(kind="fft2d_stream", shape=(2, 64, 64)).cache_key() != base
+    assert _key(n_devices=8).cache_key() != base
