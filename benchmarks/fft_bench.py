@@ -1,0 +1,133 @@
+"""Radix + realness benchmark: the PR-2 hot-path matrix as one JSON report.
+
+For each frame size N the script times 2D transforms along two axes of the
+optimization space:
+
+  * radix   — radix-2 Stockham vs radix-4 Stockham (half the stages and
+              twiddle transcendentals);
+  * realness — complex ``fft2`` vs two-for-one real ``rfft2`` (half the
+              arithmetic and HBM bytes on the real frames every paper
+              workload feeds the engine).
+
+Each cell reports median wall time plus the *modeled* HBM traffic of the
+equivalent fused kernel (``repro.kernels.ops.hbm_traffic_model``), so the
+report tracks both what we measure today (CPU/interpret in CI) and what
+the memory system will see on TPU. The acceptance gate of ISSUE 2 —
+``rfft2`` ≥ 1.5× faster than complex ``fft2`` in the same variant class —
+is computed per size in ``speedup_real_vs_complex``.
+
+  PYTHONPATH=src python benchmarks/fft_bench.py --sizes 256,512,1024
+  PYTHONPATH=src python -m benchmarks.run fft
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fft2d import fft2
+from repro.core.rfft import rfft2
+from repro.kernels.ops import hbm_traffic_model
+
+try:  # python -m benchmarks.fft_bench (repo root on sys.path)
+    from benchmarks.common import emit, time_fn
+except ImportError:  # python benchmarks/fft_bench.py (script dir on sys.path)
+    from common import emit, time_fn
+
+#: (label, transform, radix, real) — the 2×2 radix×realness matrix.
+_CELLS = (
+    ("fft2/radix2", functools.partial(fft2, variant="stockham"), 2, False),
+    ("fft2/radix4", functools.partial(fft2, variant="radix4"), 4, False),
+    ("rfft2/radix2", functools.partial(rfft2, variant="stockham"), 2, True),
+    ("rfft2/radix4", functools.partial(rfft2, variant="radix4"), 4, True),
+)
+
+
+def _iters_for(n: int) -> int:
+    """Fewer timing reps for big frames so the 2048 sweep stays minutes —
+    but never so few that one scheduler hiccup owns the median."""
+    return max(5, 12 - int(np.log2(n)))
+
+
+def bench_size(n: int) -> dict:
+    rng = np.random.default_rng(0)
+    xr = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    xc = jnp.asarray(
+        (rng.standard_normal((n, n)) + 1j * rng.standard_normal((n, n))).astype(
+            np.complex64
+        )
+    )
+    iters = _iters_for(n)
+    cells = {}
+    for label, transform, radix, real in _CELLS:
+        fn = jax.jit(transform)
+        us = time_fn(fn, xr if real else xc, warmup=1, iters=iters)
+        # Modeled HBM bytes of the equivalent fused kernel: row pass (n rows
+        # of length n) + column pass, one fused round trip each.
+        bytes_fused = 2 * hbm_traffic_model(n, n, True, radix=radix, real=real)
+        bytes_staged = 2 * hbm_traffic_model(n, n, False, radix=radix, real=real)
+        cells[label] = {
+            "us_per_call": round(us, 2),
+            "modeled_hbm_bytes_fused": bytes_fused,
+            "modeled_hbm_bytes_staged": bytes_staged,
+        }
+        emit(f"fft_bench/{label}/{n}", us, f"fused_bytes={bytes_fused}")
+    r2 = cells["fft2/radix2"]["us_per_call"] / cells["rfft2/radix2"]["us_per_call"]
+    r4 = cells["fft2/radix4"]["us_per_call"] / cells["rfft2/radix4"]["us_per_call"]
+    return {
+        "size": n,
+        "cells": cells,
+        # real-vs-complex within the same variant class (the ISSUE 2 gate)
+        "speedup_real_vs_complex": {"radix2": round(r2, 3), "radix4": round(r4, 3)},
+        "speedup_radix4_vs_radix2": round(
+            cells["fft2/radix2"]["us_per_call"] / cells["fft2/radix4"]["us_per_call"], 3
+        ),
+        "hbm_bytes_real_over_complex": round(
+            cells["rfft2/radix2"]["modeled_hbm_bytes_fused"]
+            / cells["fft2/radix2"]["modeled_hbm_bytes_fused"],
+            3,
+        ),
+    }
+
+
+def run() -> None:
+    """benchmarks.run entry point: small sweep, report to BENCH_fft.json."""
+    main(["--sizes", "256,512", "--out", "/tmp/BENCH_fft.json"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="256,512,1024,2048",
+                    help="comma-separated frame sizes N (frames are NxN)")
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    args = ap.parse_args(argv)
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    entries = [bench_size(n) for n in sizes]
+    # Gate on every size >= 1024 (the ISSUE 2 criterion); a small sweep
+    # gates on its largest size so "ok" is never vacuously true.
+    gated = [e for e in entries if e["size"] >= 1024] or \
+        [max(entries, key=lambda e: e["size"])]
+    report = {
+        "backend": jax.default_backend(),
+        "sizes": sizes,
+        "entries": entries,
+        "gated_sizes": [e["size"] for e in gated],
+        "ok": all(e["speedup_real_vs_complex"]["radix2"] >= 1.5 for e in gated),
+    }
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

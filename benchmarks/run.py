@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import accuracy, pencil_overlap, plan_autotune, table1_resources
-from benchmarks import table2_resources, table5_utilization, table6_delay, throughput
+from benchmarks import accuracy, fft_bench, pencil_overlap, plan_autotune
+from benchmarks import table1_resources, table2_resources, table5_utilization
+from benchmarks import table6_delay, throughput
 
 ALL = {
     "table1": table1_resources.run,
@@ -22,6 +23,7 @@ ALL = {
     "accuracy": accuracy.run,
     "pencil_overlap": pencil_overlap.run,
     "plan_autotune": plan_autotune.run,
+    "fft": fft_bench.run,
 }
 
 

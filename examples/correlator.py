@@ -5,13 +5,18 @@ a noisy scene entirely in the Fourier domain:
 
   correlation = IFFT2( FFT2(scene) · conj(FFT2(template)) )
 
+Scene and template are REAL, so the whole pipeline runs through the
+two-for-one ``rfft2``/``irfft2`` path (``repro.core.correlate2``): the
+conjugate-symmetric half spectrum carries all the information — half the
+arithmetic and HBM traffic of the complex transform, same peak.
+
   PYTHONPATH=src python examples/correlator.py
 """
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fft2, fftshift2, ifft2
+from repro.core import correlate2, fft2, fftshift2, ifft2, rfft2
 
 
 def make_scene(hw: int = 128, seed: int = 0):
@@ -30,19 +35,33 @@ def make_scene(hw: int = 128, seed: int = 0):
 
 def main():
     scene, template, true_pos = make_scene()
-    fs = fft2(jnp.asarray(scene))
-    ft = fft2(jnp.asarray(template))
-    corr = np.asarray(jnp.real(ifft2(fs * jnp.conj(ft))))
+
+    # Real-input matched filter: rfft2 → conj-multiply → irfft2 (auto-planned).
+    corr = np.asarray(correlate2(jnp.asarray(scene), jnp.asarray(template),
+                                 variant="auto"))
     peak = np.unravel_index(corr.argmax(), corr.shape)
     print(f"true position {true_pos}, detected {tuple(int(p) for p in peak)}")
     ok = abs(peak[0] - true_pos[0]) <= 1 and abs(peak[1] - true_pos[1]) <= 1
-    print("matched-filter detection:", "OK" if ok else "FAILED")
+    print("matched-filter detection (real two-for-one path):", "OK" if ok else "FAILED")
 
-    # power spectrum (holography-style display, DC centred)
+    # Cross-check: the full complex pipeline finds the same peak.
+    fs = fft2(jnp.asarray(scene))
+    ft = fft2(jnp.asarray(template))
+    corr_c = np.asarray(jnp.real(ifft2(fs * jnp.conj(ft))))
+    peak_c = np.unravel_index(corr_c.argmax(), corr_c.shape)
+    agree = tuple(int(p) for p in peak) == tuple(int(p) for p in peak_c)
+    print(f"complex-path peak agrees: {agree} "
+          f"(max |real - complex| = {np.max(np.abs(corr - corr_c)):.2e})")
+
+    # Power spectrum (holography-style display, DC centred). The half
+    # spectrum from rfft2 suffices for the display's left half; the full
+    # surface comes from the complex transform for the centred view.
+    half = np.asarray(jnp.abs(rfft2(jnp.asarray(scene))))
+    print(f"rfft2 half-spectrum shape: {half.shape} (vs full {fs.shape})")
     ps = np.asarray(jnp.abs(fftshift2(fs)))
     print(f"scene power-spectrum peak at centre: "
           f"{bool(ps[64, 64] == ps.max() or ps.max() > 0)}")
-    if not ok:
+    if not (ok and agree):
         raise SystemExit(1)
 
 

@@ -8,7 +8,8 @@ from repro.core.fft1d import (
     ifft,
 )
 from repro.core.fft2d import fft2, fft2_stream, fftshift2, ifft2
-from repro.core.spectral import fftconv, fourier_mixing, log_mel, stft
+from repro.core.rfft import irfft, irfft2, rfft, rfft2
+from repro.core.spectral import correlate2, fftconv, fourier_mixing, log_mel, stft
 
 __all__ = [
     "bit_reversal_permutation",
@@ -20,6 +21,11 @@ __all__ = [
     "fft2_stream",
     "fftshift2",
     "ifft2",
+    "rfft",
+    "irfft",
+    "rfft2",
+    "irfft2",
+    "correlate2",
     "fftconv",
     "fourier_mixing",
     "log_mel",

@@ -16,6 +16,12 @@ JAX mapping (see DESIGN.md §2):
   * ``variant="stockham"`` — beyond-paper optimized variant: Stockham
     autosort (no bit-reversal gather, contiguous reshapes only) — the
     TPU-friendliest access pattern; used by the optimized kernels.
+  * ``variant="radix4"``   — radix-4 Stockham: half the stage count and
+    half the twiddle transcendentals (one radix-2 stage when log2(N) is
+    odd) — the software analogue of the higher-radix butterfly papers.
+  * ``variant="fused"`` / ``"fused_r4"`` — the Pallas kernels
+    (``repro.kernels``): the whole transform in one VMEM residency, one
+    HBM round trip; ``fused_r4`` runs the radix-4 panel inside.
 
 All variants compute the same DFT and are tested against each other and a
 float64 DFT oracle.
@@ -31,7 +37,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-Variant = Literal["looped", "unrolled", "stockham", "auto"]
+Variant = Literal[
+    "looped", "unrolled", "stockham", "radix4", "fused", "fused_r4", "auto"
+]
 
 __all__ = [
     "fft",
@@ -189,6 +197,54 @@ def _fft_stockham(x: jax.Array, n: int) -> jax.Array:
     return y.reshape(*batch, n)
 
 
+@functools.lru_cache(maxsize=64)
+def _radix4_twiddles(n: int):
+    """Per-radix-4-stage base twiddles W_{4l}^k (W^2, W^3 are derived)."""
+    stages = _check_pow2(n)
+    out = []
+    l = 2 if stages % 2 else 1
+    while l < n:
+        k = np.arange(l, dtype=np.float64)
+        out.append(np.exp(-2j * np.pi * k / (4 * l)).astype(np.complex64))
+        l *= 4
+    return tuple(out)
+
+
+def _fft_radix4(x: jax.Array, n: int) -> jax.Array:
+    """Radix-4 Stockham autosort: ceil(log2(N)/2) stages of 4-point
+    butterflies — half the stage shuffles and half the twiddle tables of the
+    radix-2 schedule (one twiddle-free radix-2 stage when log2(N) is odd)."""
+    stages = _check_pow2(n)
+    batch = x.shape[:-1]
+    y = x.reshape(*batch, n, 1)
+    l = 1
+    if stages % 2:
+        r = n >> 1
+        y = y.reshape(*batch, 2, r, 1)
+        a = y[..., 0, :, :]
+        b = y[..., 1, :, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1)
+        l = 2
+    for w1_np in _radix4_twiddles(n):
+        r = n // (4 * l)
+        y = y.reshape(*batch, 4, r, l)
+        w1 = jnp.asarray(w1_np)
+        w2 = w1 * w1
+        w3 = w2 * w1
+        a0 = y[..., 0, :, :]
+        a1 = y[..., 1, :, :] * w1
+        a2 = y[..., 2, :, :] * w2
+        a3 = y[..., 3, :, :] * w3
+        s02, d02 = a0 + a2, a0 - a2
+        s13, d13 = a1 + a3, a1 - a3
+        # X[k+c'l] = sum_j (-i)^(j c') a_j W^(jk): the ±i are free rotations.
+        y = jnp.concatenate(
+            [s02 + s13, d02 - 1j * d13, s02 - s13, d02 + 1j * d13], axis=-1
+        )
+        l *= 4
+    return y.reshape(*batch, n)
+
+
 def fft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
     """Radix-2 FFT along ``axis``. Input real or complex; returns complex64.
 
@@ -214,6 +270,12 @@ def fft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
         y = _fft_unrolled(x, n)
     elif variant == "stockham":
         y = _fft_stockham(x, n)
+    elif variant == "radix4":
+        y = _fft_radix4(x, n)
+    elif variant in ("fused", "fused_r4"):
+        from repro.kernels.ops import fft_kernel  # lazy: kernels import core
+
+        y = fft_kernel(x, radix=4 if variant == "fused_r4" else 2)
     else:
         raise ValueError(f"unknown variant {variant!r}")
     if axis != x.ndim - 1:
@@ -224,5 +286,14 @@ def fft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
 def ifft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
     """Inverse FFT via the conjugation identity (shares the forward engine)."""
     x = jnp.asarray(x).astype(jnp.complex64)
-    n = x.shape[axis % x.ndim]
+    axis_n = axis % x.ndim
+    n = x.shape[axis_n]
+    if variant == "auto":
+        from repro.plan.api import resolve  # lazy: plan imports core
+
+        # Inverse transforms carry their own plan direction so forward
+        # tuning never cross-contaminates them. Key on the axis-moved
+        # shape (transform axis last), matching the forward convention.
+        key_shape = x.shape[:axis_n] + x.shape[axis_n + 1:] + (n,)
+        variant = resolve("fft1d", key_shape, direction="inv").variant
     return jnp.conj(fft(jnp.conj(x), axis=axis, variant=variant)) / n

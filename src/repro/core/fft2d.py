@@ -25,25 +25,37 @@ from repro.core.fft1d import Variant, fft, ifft
 __all__ = ["fft2", "ifft2", "fft2_stream", "fftshift2"]
 
 
-def _resolve_2d(kind: str, shape, variant: Variant) -> Variant:
+def _resolve_2d(kind: str, shape, variant: Variant, direction: str = "fwd") -> Variant:
     """Map ``variant="auto"`` to a concrete schedule for the whole 2D problem
     (one plan per frame shape, not one per 1D pass)."""
     if variant != "auto":
         return variant
     from repro.plan.api import resolve  # lazy: plan imports core
 
-    return resolve(kind, tuple(shape)).variant
+    return resolve(kind, tuple(shape), direction=direction).variant
 
 
 def fft2(x: jax.Array, variant: Variant = "looped") -> jax.Array:
     """2D FFT over the last two axes: row pass then column pass (paper fig. 1)."""
     variant = _resolve_2d("fft2d", jnp.shape(x), variant)
+    if variant in ("fused", "fused_r4"):
+        from repro.kernels.ops import fft2_kernel  # lazy: kernels import core
+
+        # Whole-frame VMEM residency (with built-in failover to an unfused
+        # row/turn/column composition when the frame exceeds the budget).
+        return fft2_kernel(x, radix=4 if variant == "fused_r4" else 2)
     y = fft(x, axis=-1, variant=variant)   # first 1D FFT block (rows)
     return fft(y, axis=-2, variant=variant)  # second 1D FFT block (columns)
 
 
 def ifft2(x: jax.Array, variant: Variant = "looped") -> jax.Array:
-    variant = _resolve_2d("fft2d", jnp.shape(x), variant)
+    # Inverse transforms plan under their own direction key ("inv") so
+    # forward-tuned wisdom never cross-contaminates them.
+    variant = _resolve_2d("fft2d", jnp.shape(x), variant, direction="inv")
+    if variant in ("fused", "fused_r4"):
+        x = jnp.asarray(x)
+        h, w = x.shape[-2], x.shape[-1]
+        return jnp.conj(fft2(jnp.conj(x), variant=variant)) / (h * w)
     y = ifft(x, axis=-1, variant=variant)
     return ifft(y, axis=-2, variant=variant)
 

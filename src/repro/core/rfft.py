@@ -1,0 +1,156 @@
+"""Real-input FFTs via two-for-one Hermitian packing — half the work.
+
+Every workload the paper targets (medical imaging, holography, correlation
+recognition) feeds the transform *real* data, whose spectrum is conjugate
+symmetric: Y[k] = conj(Y[N-k]). Computing the full complex FFT therefore
+does 2× the arithmetic and moves 2× the bytes actually required. The classic
+remedy — pack the N real samples as N/2 complex numbers z[j] = x[2j] +
+i·x[2j+1], run ONE half-size complex FFT, and untangle the two interleaved
+spectra with the symmetry recombination
+
+    Y[k] = Xe[k] + W_N^k · Xo[k],   k = 0..N/2
+
+— is the software twin of the paper's area reuse: the same butterfly engine,
+half the stages' worth of data.
+
+Entry points mirror ``fft``/``ifft``/``fft2``/``ifft2`` and accept every
+engine variant, including ``"fused"``/``"fused_r4"`` (the Pallas kernels,
+which run the pack + half-size panel + recombination in one VMEM residency)
+and ``"auto"`` (planned through ``repro.plan`` under the ``rfft1d``/
+``rfft2d`` problem kinds).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fft1d import Variant, fft, ifft
+
+__all__ = ["rfft", "irfft", "rfft2", "irfft2"]
+
+_FUSED = ("fused", "fused_r4")
+
+
+def _check_real(x: jax.Array, name: str) -> jax.Array:
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        raise TypeError(f"{name} expects real input; use fft/fft2 for complex")
+    return x.astype(jnp.float32)
+
+
+def _resolve(kind: str, shape, variant: Variant, direction: str = "fwd") -> Variant:
+    if variant != "auto":
+        return variant
+    from repro.plan.api import resolve  # lazy: plan imports core
+
+    return resolve(kind, tuple(shape), dtype="float32", direction=direction).variant
+
+
+def _radix(variant: Variant) -> int:
+    return 4 if variant == "fused_r4" else 2
+
+
+def _rfft_jnp(x: jax.Array, n: int, variant: Variant) -> jax.Array:
+    """Pack N reals as N/2 complex, half-size FFT, symmetry recombination."""
+    m = n // 2
+    z = (x[..., 0::2] + 1j * x[..., 1::2]).astype(jnp.complex64)
+    zf = fft(z, variant=variant) if m > 1 else z
+    k = jnp.arange(m + 1)
+    zk = jnp.take(zf, k % m, axis=-1)               # Z[k], with Z[M] = Z[0]
+    zmk = jnp.conj(jnp.take(zf, (-k) % m, axis=-1))  # conj(Z[(M-k) mod M])
+    xe = 0.5 * (zk + zmk)                           # spectrum of even samples
+    xo = -0.5j * (zk - zmk)                         # spectrum of odd samples
+    w = jnp.exp(-2j * jnp.pi * k / n).astype(jnp.complex64)
+    return xe + w * xo
+
+
+def _irfft_jnp(y: jax.Array, n: int, variant: Variant) -> jax.Array:
+    """Invert the recombination, one half-size IFFT, de-interleave."""
+    m = n // 2
+    # np.fft.irfft semantics: DC and Nyquist bins of a Hermitian spectrum
+    # are real — discard any imaginary part there.
+    edge = jnp.arange(m + 1)
+    y = jnp.where((edge == 0) | (edge == m), jnp.real(y).astype(jnp.complex64), y)
+    k = jnp.arange(m)
+    yk = y[..., :m]
+    ymk = jnp.conj(jnp.flip(y[..., 1:], axis=-1))   # conj(Y[M-k]), k = 0..M-1
+    xe = 0.5 * (yk + ymk)
+    xo = 0.5 * (yk - ymk) * jnp.exp(2j * jnp.pi * k / n).astype(jnp.complex64)
+    z = xe + 1j * xo
+    zi = ifft(z, variant=variant) if m > 1 else z
+    out = jnp.stack([jnp.real(zi), jnp.imag(zi)], axis=-1)
+    return out.reshape(*zi.shape[:-1], n).astype(jnp.float32)
+
+
+def rfft(x: jax.Array, axis: int = -1, variant: Variant = "stockham") -> jax.Array:
+    """Real-input FFT along ``axis`` -> non-redundant half spectrum
+    (..., N/2+1) complex64. N must be a power of two >= 2."""
+    x = _check_real(x, "rfft")
+    axis = axis % x.ndim
+    if axis != x.ndim - 1:
+        x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"rfft needs a power-of-two length >= 2, got {n}")
+    variant = _resolve("rfft1d", x.shape, variant)
+    if variant in _FUSED:
+        from repro.kernels.ops import rfft_kernel  # lazy: kernels import core
+
+        y = rfft_kernel(x, radix=_radix(variant))
+    else:
+        y = _rfft_jnp(x, n, variant)
+    if axis != x.ndim - 1:
+        y = jnp.moveaxis(y, -1, axis)
+    return y
+
+
+def irfft(y: jax.Array, axis: int = -1, variant: Variant = "stockham") -> jax.Array:
+    """Inverse of :func:`rfft`: (..., N/2+1) half spectrum -> real (..., N)."""
+    y = jnp.asarray(y).astype(jnp.complex64)
+    axis = axis % y.ndim
+    if axis != y.ndim - 1:
+        y = jnp.moveaxis(y, axis, -1)
+    n = 2 * (y.shape[-1] - 1)
+    if n < 2 or n & (n - 1):
+        raise ValueError(
+            f"irfft needs a half spectrum of width N/2+1 with N a power of "
+            f"two, got width {y.shape[-1]}"
+        )
+    variant = _resolve("rfft1d", y.shape[:-1] + (n,), variant, direction="inv")
+    if variant in _FUSED:
+        from repro.kernels.ops import irfft_kernel  # lazy: kernels import core
+
+        out = irfft_kernel(y, radix=_radix(variant))
+    else:
+        out = _irfft_jnp(y, n, variant)
+    if axis != y.ndim - 1:
+        out = jnp.moveaxis(out, -1, axis)
+    return out
+
+
+def rfft2(x: jax.Array, variant: Variant = "stockham") -> jax.Array:
+    """2D real-input FFT over the last two axes: row rfft then full column
+    FFT -> (..., H, W/2+1) complex64."""
+    x = _check_real(x, "rfft2")
+    variant = _resolve("rfft2d", x.shape, variant)
+    if variant in _FUSED:
+        from repro.kernels.ops import rfft2_kernel  # lazy: kernels import core
+
+        return rfft2_kernel(x, radix=_radix(variant))
+    y = rfft(x, axis=-1, variant=variant)
+    return fft(y, axis=-2, variant=variant)
+
+
+def irfft2(y: jax.Array, variant: Variant = "stockham") -> jax.Array:
+    """Inverse of :func:`rfft2`: (..., H, W/2+1) -> real (..., H, W)."""
+    y = jnp.asarray(y).astype(jnp.complex64)
+    h, half = y.shape[-2], y.shape[-1]
+    w = 2 * (half - 1)
+    variant = _resolve("rfft2d", y.shape[:-1] + (w,), variant, direction="inv")
+    if variant in _FUSED:
+        from repro.kernels.ops import irfft2_kernel  # lazy: kernels import core
+
+        return irfft2_kernel(y, radix=_radix(variant))
+    z = ifft(y, axis=-2, variant=variant)
+    return irfft(z, axis=-1, variant=variant)

@@ -22,9 +22,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fft1d import Variant, fft, ifft
-from repro.core.fft2d import fft2
+from repro.core.fft2d import fft2, ifft2
+from repro.core.rfft import irfft, irfft2, rfft, rfft2
 
-__all__ = ["fourier_mixing", "fftconv", "stft", "log_mel"]
+__all__ = ["fourier_mixing", "fftconv", "correlate2", "stft", "log_mel"]
+
+
+def _is_real(x) -> bool:
+    return not jnp.issubdtype(jnp.asarray(x).dtype, jnp.complexfloating)
 
 
 def fourier_mixing(x: jax.Array, variant: str = "looped") -> jax.Array:
@@ -43,18 +48,10 @@ def fourier_mixing(x: jax.Array, variant: str = "looped") -> jax.Array:
 def rfft_last_axis(x: jax.Array, variant: Variant = "stockham") -> jax.Array:
     """Real-input FFT along the last axis via the packed half-length trick:
     one complex FFT of length D/2 + O(D) untangling, instead of length D.
-    Returns the non-redundant half spectrum (..., D//2 + 1)."""
-    d = x.shape[-1]
-    m = d // 2
-    z = x[..., 0::2] + 1j * x[..., 1::2]          # (..., M) complex
-    zf = fft(z.astype(jnp.complex64), variant=variant)
-    k = jnp.arange(m + 1)
-    zk = jnp.take(zf, k % m, axis=-1)             # Z[k], k = 0..M (Z[M]=Z[0])
-    zmk = jnp.conj(jnp.take(zf, (-k) % m, axis=-1))
-    xe = 0.5 * (zk + zmk)                         # FFT of even samples
-    xo = -0.5j * (zk - zmk)                       # FFT of odd samples
-    w = jnp.exp(-2j * jnp.pi * k / d).astype(jnp.complex64)
-    return xe + w * xo
+    Returns the non-redundant half spectrum (..., D//2 + 1).
+
+    Thin alias of :func:`repro.core.rfft.rfft` (kept for back-compat)."""
+    return rfft(x, axis=-1, variant=variant)
 
 
 def fourier_mixing_rfft(x: jax.Array, variant: Variant = "stockham") -> jax.Array:
@@ -82,18 +79,43 @@ def fftconv(x: jax.Array, kernel: jax.Array, variant: Variant = "looped") -> jax
 
     x: (..., seq, d); kernel: (seq_k, d) with seq_k <= seq. O(L log L) versus
     the O(L²) direct form — the spectral primitive for SSM/hybrid archs.
+    Real inputs (the usual case) take the two-for-one ``rfft``/``irfft``
+    path: half-size transforms over the non-redundant half spectrum.
     """
     seq = x.shape[-2]
     n = _next_pow2(2 * seq)  # zero-pad to avoid circular wrap
     xt = jnp.swapaxes(x, -1, -2)                      # (..., d, seq)
     kt = jnp.swapaxes(kernel, -1, -2)                 # (d, seq_k)
-    xf = fft(jnp.pad(xt, [(0, 0)] * (xt.ndim - 1) + [(0, n - seq)]), variant=variant)
-    kf = fft(
-        jnp.pad(kt, [(0, 0)] * (kt.ndim - 1) + [(0, n - kt.shape[-1])]),
-        variant=variant,
-    )
-    y = ifft(xf * kf, variant=variant)[..., :seq]
+    xp = jnp.pad(xt, [(0, 0)] * (xt.ndim - 1) + [(0, n - seq)])
+    kp = jnp.pad(kt, [(0, 0)] * (kt.ndim - 1) + [(0, n - kt.shape[-1])])
+    if _is_real(x) and _is_real(kernel):
+        y = irfft(rfft(xp, variant=variant) * rfft(kp, variant=variant),
+                  variant=variant)[..., :seq]
+        return jnp.swapaxes(y, -1, -2).astype(x.dtype)
+    y = ifft(fft(xp, variant=variant) * fft(kp, variant=variant),
+             variant=variant)[..., :seq]
     return jnp.swapaxes(jnp.real(y), -1, -2).astype(x.dtype)
+
+
+def correlate2(scene: jax.Array, template: jax.Array,
+               variant: Variant = "stockham") -> jax.Array:
+    """Matched-filter cross-correlation entirely in the Fourier domain:
+
+        corr = IFFT2( FFT2(scene) · conj(FFT2(template)) )
+
+    — the paper's correlation-pattern-recognition application. Real inputs
+    (camera frames, templates) take the two-for-one ``rfft2``/``irfft2``
+    path: the conjugate-symmetric half spectrum carries all the
+    information, so the whole pipeline runs at half the arithmetic and
+    HBM traffic of the complex transform.
+    """
+    if _is_real(scene) and _is_real(template):
+        fs = rfft2(scene, variant=variant)
+        ft = rfft2(template, variant=variant)
+        return irfft2(fs * jnp.conj(ft), variant=variant)
+    fs = fft2(jnp.asarray(scene).astype(jnp.complex64), variant=variant)
+    ft = fft2(jnp.asarray(template).astype(jnp.complex64), variant=variant)
+    return jnp.real(ifft2(fs * jnp.conj(ft), variant=variant))
 
 
 @functools.lru_cache(maxsize=8)

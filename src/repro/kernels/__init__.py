@@ -1,7 +1,16 @@
 """Pallas TPU kernels (validated on CPU via interpret mode)."""
 
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.ops import fft2_kernel, fft_kernel, fft_staged, hbm_traffic_model
+from repro.kernels.ops import (
+    fft2_kernel,
+    fft_kernel,
+    fft_staged,
+    hbm_traffic_model,
+    irfft2_kernel,
+    irfft_kernel,
+    rfft2_kernel,
+    rfft_kernel,
+)
 from repro.kernels.slstm_scan import slstm_scan
 
 __all__ = [
@@ -10,5 +19,9 @@ __all__ = [
     "fft_staged",
     "flash_attention_fwd",
     "hbm_traffic_model",
+    "irfft2_kernel",
+    "irfft_kernel",
+    "rfft2_kernel",
+    "rfft_kernel",
     "slstm_scan",
 ]

@@ -1,17 +1,33 @@
-"""Fused radix-2 FFT Pallas kernels — the paper's reuse insight, TPU-native.
+"""Fused radix-2/radix-4 FFT Pallas kernels — the paper's reuse insight, TPU-native.
 
 The paper keeps ONE stage of butterfly hardware and streams all log2(N)
 stages through it. The TPU translation (DESIGN.md §2): keep the data panel
-resident in VMEM and stream all log2(N) stages over it inside one kernel —
-one HBM read + one HBM write for the whole transform, instead of the
-log2(N) round trips of the stage-at-a-time baseline (`kernels/butterfly.py`).
-The paper's area reduction factor (1/log2 N, eq. 5) reappears as the HBM
-traffic ratio between the two kernels.
+resident in VMEM and stream all stages over it inside one kernel — one HBM
+read + one HBM write for the whole transform, instead of the log2(N) round
+trips of the stage-at-a-time baseline (`kernels/butterfly.py`). The paper's
+area reduction factor (1/log2 N, eq. 5) reappears as the HBM traffic ratio
+between the two kernels.
 
-The in-VMEM schedule is Stockham autosort: every stage is a contiguous
-reshape + one butterfly pass — no bit-reversal gather, so nothing here needs
-dynamic indexing (TPU vector units hate gathers). Twiddles are generated
-in-register from an iota (the twiddle "ROM" costs no VMEM).
+Two in-VMEM schedules, both Stockham autosort (contiguous reshapes, no
+bit-reversal gather — TPU vector units hate gathers):
+
+  * radix-2 (``_stockham_panel``)    — log2(N) stages of 2-point butterflies.
+  * radix-4 (``_stockham_panel_r4``) — log4(N) stages of 4-point butterflies
+    (one leading radix-2 stage when log2(N) is odd): half the stage count,
+    half the ``concatenate`` shuffles, and the three twiddle factors per
+    butterfly are derived from ONE ``cos/sin`` table by complex
+    multiplication, so the transcendental count is halved too.
+
+The twiddle "ROM" is hoisted: the largest stage's ``cos/sin`` table is
+generated once per panel (from an iota, costing no HBM) and every smaller
+stage reads a strided slice of it instead of recomputing ``jnp.cos/jnp.sin``.
+
+Real-input kernels (two-for-one Hermitian packing): ``rfft_fused`` packs N
+reals as N/2 complex, runs the half-size panel, and untangles the spectrum
+with the conjugate-symmetry recombination — inside the same kernel, so the
+whole real transform is still one HBM round trip at half the traffic of the
+complex path. ``rfft2_fused``/``irfft2_fused`` fuse the row rfft, the
+in-VMEM corner turn and the column FFT the same way.
 
 ABI: separate float32 re/im planes (TPU Pallas has no complex dtype).
 """
@@ -25,14 +41,38 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fft_panel_kernel", "fft_fused", "fft2_fused", "pick_row_tile"]
+__all__ = [
+    "fft_panel_kernel",
+    "fft_fused",
+    "fft2_fused",
+    "fft_fits_vmem",
+    "fft2_fits_vmem",
+    "pick_row_tile",
+    "rfft_fused",
+    "irfft_fused",
+    "rfft2_fused",
+    "irfft2_fused",
+]
 
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # conservative half of a v5e core's VMEM
 
+#: f32 arrays of frame size live at the 2D kernel's peak: input re/im panes,
+#: output re/im panes, the working panel re/im, and the corner-turn's
+#: transposed temporaries re/im. The old guard counted only 4 and let large
+#: frames overflow VMEM silently.
+_FFT2_WORKING_ARRAYS = 8
 
-def pick_row_tile(batch: int, n: int, arrays: int = 4) -> int:
-    """Largest power-of-two row tile whose working set fits the VMEM budget."""
-    per_row = n * 4 * arrays  # f32 re+im, in+out
+#: Same census for the 1D panel: input re/im, output re/im, working re/im.
+_FFT1_WORKING_ARRAYS = 6
+
+
+def pick_row_tile(batch: int, n: int, arrays: int = _FFT1_WORKING_ARRAYS) -> int:
+    """Largest power-of-two row tile whose working set fits the VMEM budget.
+
+    ``arrays`` is the number of f32 row-sized arrays simultaneously live in
+    the kernel (inputs + outputs + working copies), not just the I/O count.
+    """
+    per_row = n * 4 * arrays
     tile = max(1, _VMEM_BUDGET_BYTES // max(per_row, 1))
     tile = 1 << (tile.bit_length() - 1)
     while batch % tile != 0:
@@ -40,21 +80,44 @@ def pick_row_tile(batch: int, n: int, arrays: int = 4) -> int:
     return max(tile, 1)
 
 
+def fft_fits_vmem(n: int, arrays: int = _FFT1_WORKING_ARRAYS) -> bool:
+    """True when even a single length-N row's working set fits the budget
+    (below this, ``pick_row_tile`` would degrade to a 1-row tile that still
+    overflows VMEM)."""
+    return n * 4 * arrays <= _VMEM_BUDGET_BYTES
+
+
+def fft2_fits_vmem(h: int, w: int, arrays: int = _FFT2_WORKING_ARRAYS) -> bool:
+    """True when a fused 2D kernel's real working set fits the VMEM budget."""
+    return h * w * 4 * arrays <= _VMEM_BUDGET_BYTES
+
+
+# --------------------------- in-VMEM panels -------------------------------
+
+
 def _stockham_panel(re: jax.Array, im: jax.Array, n: int):
-    """All log2(N) stages over a (tile, N) panel, entirely in registers/VMEM."""
-    stages = int(math.log2(n))
+    """All log2(N) radix-2 stages over a (tile, N) panel, in registers/VMEM."""
+    stages = int(math.log2(n)) if n > 1 else 0
     tb = re.shape[0]
     yr = re.reshape(tb, n, 1)
     yi = im.reshape(tb, n, 1)
+    if stages == 0:
+        return yr.reshape(tb, n), yi.reshape(tb, n)
+    # Twiddle ROM hoisted out of the stage loop: one cos/sin evaluation for
+    # the largest stage; smaller stages are strided slices of it
+    # (ang_l(k) = -pi*k/l = ang_lmax(k * lmax/l)).
+    l_max = n // 2
+    j = jax.lax.broadcasted_iota(jnp.float32, (1, 1, l_max), 2)
+    ang = (-math.pi / l_max) * j
+    rom_r, rom_i = jnp.cos(ang), jnp.sin(ang)
     for s in range(stages):
         l = 1 << s
         r = n >> (s + 1)
         yr = yr.reshape(tb, 2, r, l)
         yi = yi.reshape(tb, 2, r, l)
-        # Twiddle "ROM" generated in-register: W_{2l}^k, k = 0..l-1.
-        k = jax.lax.broadcasted_iota(jnp.float32, (1, 1, l), 2)
-        ang = (-math.pi / l) * k
-        wr, wi = jnp.cos(ang), jnp.sin(ang)
+        stride = l_max // l
+        wr = rom_r[..., ::stride]
+        wi = rom_i[..., ::stride]
         ar, ai = yr[:, 0], yi[:, 0]
         br, bi = yr[:, 1], yi[:, 1]
         tr = br * wr - bi * wi
@@ -64,31 +127,177 @@ def _stockham_panel(re: jax.Array, im: jax.Array, n: int):
     return yr.reshape(tb, n), yi.reshape(tb, n)
 
 
-def fft_panel_kernel(re_ref, im_ref, out_re_ref, out_im_ref):
+def _stockham_panel_r4(re: jax.Array, im: jax.Array, n: int):
+    """Radix-4 Stockham panel: log4(N) stages of 4-point butterflies.
+
+    Odd log2(N) runs one twiddle-free radix-2 stage first, then radix-4 the
+    rest of the way. Per stage the three twiddles W, W^2, W^3 come from one
+    hoisted cos/sin table (W^2, W^3 by complex multiplication — no extra
+    transcendentals), and the ±i rotations of the 4-point butterfly are
+    free sign/plane swaps.
+    """
+    stages = int(math.log2(n)) if n > 1 else 0
+    tb = re.shape[0]
+    yr = re.reshape(tb, n, 1)
+    yi = im.reshape(tb, n, 1)
+    if stages == 0:
+        return yr.reshape(tb, n), yi.reshape(tb, n)
+    l = 1
+    if stages % 2:
+        # One radix-2 stage (l=1 -> twiddle-free) to make the rest radix-4.
+        r = n >> 1
+        yr = yr.reshape(tb, 2, r, 1)
+        yi = yi.reshape(tb, 2, r, 1)
+        ar, ai = yr[:, 0], yi[:, 0]
+        br, bi = yr[:, 1], yi[:, 1]
+        yr = jnp.concatenate([ar + br, ar - br], axis=-1)
+        yi = jnp.concatenate([ai + bi, ai - bi], axis=-1)
+        l = 2
+    if l < n:
+        # Hoisted twiddle ROM for the largest radix-4 stage (l = n/4):
+        # W_{4l}^k = exp(-2i*pi*k/n); smaller stages stride into it.
+        l_max = n // 4
+        j = jax.lax.broadcasted_iota(jnp.float32, (1, 1, l_max), 2)
+        ang = (-2.0 * math.pi / n) * j
+        rom_r, rom_i = jnp.cos(ang), jnp.sin(ang)
+    while l < n:
+        r = n // (4 * l)
+        yr = yr.reshape(tb, 4, r, l)
+        yi = yi.reshape(tb, 4, r, l)
+        stride = (n // 4) // l
+        w1r = rom_r[..., ::stride]
+        w1i = rom_i[..., ::stride]
+        w2r = w1r * w1r - w1i * w1i
+        w2i = 2.0 * w1r * w1i
+        w3r = w2r * w1r - w2i * w1i
+        w3i = w2r * w1i + w2i * w1r
+        a0r, a0i = yr[:, 0], yi[:, 0]
+        a1r = yr[:, 1] * w1r - yi[:, 1] * w1i
+        a1i = yr[:, 1] * w1i + yi[:, 1] * w1r
+        a2r = yr[:, 2] * w2r - yi[:, 2] * w2i
+        a2i = yr[:, 2] * w2i + yi[:, 2] * w2r
+        a3r = yr[:, 3] * w3r - yi[:, 3] * w3i
+        a3i = yr[:, 3] * w3i + yi[:, 3] * w3r
+        s02r, s02i = a0r + a2r, a0i + a2i
+        d02r, d02i = a0r - a2r, a0i - a2i
+        s13r, s13i = a1r + a3r, a1i + a3i
+        d13r, d13i = a1r - a3r, a1i - a3i
+        # X[k+c'l] = sum_j (-i)^(j c') a_j: the ±i factors are plane swaps.
+        yr = jnp.concatenate(
+            [s02r + s13r, d02r + d13i, s02r - s13r, d02r - d13i], axis=-1
+        )
+        yi = jnp.concatenate(
+            [s02i + s13i, d02i - d13r, s02i - s13i, d02i + d13r], axis=-1
+        )
+        l *= 4
+    return yr.reshape(tb, n), yi.reshape(tb, n)
+
+
+def _panel(radix: int):
+    if radix not in (2, 4):
+        raise ValueError(f"radix must be 2 or 4, got {radix}")
+    return _stockham_panel_r4 if radix == 4 else _stockham_panel
+
+
+# ----------------------- real-input (two-for-one) panels -------------------
+
+
+def _rfft_panel(x: jax.Array, n: int, radix: int):
+    """Real (tile, N) panel -> half spectrum (tile, N/2+1) re/im.
+
+    Classic two-for-one: pack even/odd samples as N/2 complex, run the
+    half-size panel, untangle with the Hermitian-symmetry recombination
+    Y[k] = Xe[k] + W_N^k Xo[k].
+    """
+    m = n // 2
+    zr = x[:, 0::2]
+    zi = x[:, 1::2]
+    zr, zi = _panel(radix)(zr, zi, m)
+    # Z[k] for k = 0..M (Z[M] = Z[0]) and conj(Z[(M-k) mod M]).
+    zkr = jnp.concatenate([zr, zr[:, :1]], axis=-1)
+    zki = jnp.concatenate([zi, zi[:, :1]], axis=-1)
+    zmkr = jnp.concatenate([zr[:, :1], jnp.flip(zr[:, 1:], axis=-1), zr[:, :1]], axis=-1)
+    zmki = -jnp.concatenate([zi[:, :1], jnp.flip(zi[:, 1:], axis=-1), zi[:, :1]], axis=-1)
+    xer = 0.5 * (zkr + zmkr)
+    xei = 0.5 * (zki + zmki)
+    dr = zkr - zmkr
+    di = zki - zmki
+    xor_ = 0.5 * di          # Xo = -i/2 (Zk - conj(Zmk))
+    xoi = -0.5 * dr
+    k = jax.lax.broadcasted_iota(jnp.float32, (1, m + 1), 1)
+    ang = (-2.0 * math.pi / n) * k
+    wr, wi = jnp.cos(ang), jnp.sin(ang)
+    yr = xer + wr * xor_ - wi * xoi
+    yi = xei + wr * xoi + wi * xor_
+    return yr, yi
+
+
+def _irfft_panel(yr: jax.Array, yi: jax.Array, n: int, radix: int):
+    """Half spectrum (tile, N/2+1) re/im -> real (tile, N) panel (inverse)."""
+    tb = yr.shape[0]
+    m = n // 2
+    # np.fft.irfft semantics: the DC and Nyquist bins of a Hermitian
+    # spectrum are real — discard any imaginary part instead of folding
+    # it into the output.
+    edge = jax.lax.broadcasted_iota(jnp.int32, (1, m + 1), 1)
+    yi = jnp.where((edge == 0) | (edge == m), 0.0, yi)
+    ykr, yki = yr[:, :m], yi[:, :m]
+    # conj(Y[M-k]) for k = 0..M-1 is the reversed tail of the half spectrum.
+    ymkr = jnp.flip(yr[:, 1:], axis=-1)
+    ymki = -jnp.flip(yi[:, 1:], axis=-1)
+    xer = 0.5 * (ykr + ymkr)
+    xei = 0.5 * (yki + ymki)
+    txr = 0.5 * (ykr - ymkr)   # W^k Xo[k]
+    txi = 0.5 * (yki - ymki)
+    k = jax.lax.broadcasted_iota(jnp.float32, (1, m), 1)
+    ang = (2.0 * math.pi / n) * k   # W^{-k} undoes the forward phase
+    wr, wi = jnp.cos(ang), jnp.sin(ang)
+    xor_ = txr * wr - txi * wi
+    xoi = txr * wi + txi * wr
+    zr = xer - xoi             # Z = Xe + i·Xo
+    zi = xei + xor_
+    # IFFT_M via the conjugation identity on the shared forward panel.
+    fr, fi = _panel(radix)(zr, -zi, m)
+    inv = 1.0 / m
+    zr, zi = fr * inv, -fi * inv
+    # Interleave: x[2j] = Re(z[j]), x[2j+1] = Im(z[j]).
+    return jnp.stack([zr, zi], axis=-1).reshape(tb, n)
+
+
+# ------------------------------ 1D kernels --------------------------------
+
+
+def fft_panel_kernel(re_ref, im_ref, out_re_ref, out_im_ref, *, radix: int = 2):
     """Kernel body: one VMEM-resident panel, all stages fused."""
     n = re_ref.shape[-1]
-    yr, yi = _stockham_panel(re_ref[...], im_ref[...], n)
+    yr, yi = _panel(radix)(re_ref[...], im_ref[...], n)
     out_re_ref[...] = yr
     out_im_ref[...] = yi
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "row_tile"))
+@functools.partial(jax.jit, static_argnames=("interpret", "row_tile", "radix"))
 def fft_fused(
     re: jax.Array,
     im: jax.Array,
     *,
     row_tile: int | None = None,
+    radix: int = 2,
     interpret: bool = False,
 ):
     """FFT along the last axis of (B, N) re/im planes; one HBM round trip."""
     b, n = re.shape
     if n & (n - 1):
         raise ValueError(f"power-of-two length required, got {n}")
+    if not fft_fits_vmem(n):
+        raise ValueError(
+            f"length-{n} rows exceed the fused-kernel VMEM budget even at "
+            "a 1-row tile; use an unfused variant"
+        )
     tile = row_tile or pick_row_tile(b, n)
     grid = (b // tile,)
     spec = pl.BlockSpec((tile, n), lambda i: (i, 0))
     return pl.pallas_call(
-        fft_panel_kernel,
+        functools.partial(fft_panel_kernel, radix=radix),
         grid=grid,
         in_specs=[spec, spec],
         out_specs=[spec, spec],
@@ -100,7 +309,87 @@ def fft_fused(
     )(re.astype(jnp.float32), im.astype(jnp.float32))
 
 
-def _fft2_kernel(re_ref, im_ref, out_re_ref, out_im_ref):
+def _rfft_kernel_body(x_ref, out_re_ref, out_im_ref, *, radix: int):
+    yr, yi = _rfft_panel(x_ref[...], x_ref.shape[-1], radix)
+    out_re_ref[...] = yr
+    out_im_ref[...] = yi
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "row_tile", "radix"))
+def rfft_fused(
+    x: jax.Array,
+    *,
+    row_tile: int | None = None,
+    radix: int = 2,
+    interpret: bool = False,
+):
+    """Real-input FFT of (B, N) -> (B, N/2+1) re/im; one HBM round trip at
+    roughly half the complex path's traffic and arithmetic."""
+    b, n = x.shape
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"power-of-two length >= 2 required, got {n}")
+    if not fft_fits_vmem(n):
+        raise ValueError(
+            f"length-{n} rows exceed the fused-kernel VMEM budget even at "
+            "a 1-row tile; use an unfused variant"
+        )
+    m = n // 2
+    tile = row_tile or pick_row_tile(b, n)
+    in_spec = pl.BlockSpec((tile, n), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((tile, m + 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_rfft_kernel_body, radix=radix),
+        grid=(b // tile,),
+        in_specs=[in_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m + 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, m + 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+
+
+def _irfft_kernel_body(re_ref, im_ref, out_ref, *, n: int, radix: int):
+    out_ref[...] = _irfft_panel(re_ref[...], im_ref[...], n, radix)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "row_tile", "radix"))
+def irfft_fused(
+    re: jax.Array,
+    im: jax.Array,
+    *,
+    row_tile: int | None = None,
+    radix: int = 2,
+    interpret: bool = False,
+):
+    """Inverse of :func:`rfft_fused`: (B, N/2+1) re/im -> real (B, N)."""
+    b, half = re.shape
+    n = 2 * (half - 1)
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"half-spectrum width must be N/2+1 with N a power of two, got {half}")
+    if not fft_fits_vmem(n):
+        raise ValueError(
+            f"length-{n} rows exceed the fused-kernel VMEM budget even at "
+            "a 1-row tile; use an unfused variant"
+        )
+    tile = row_tile or pick_row_tile(b, n)
+    in_spec = pl.BlockSpec((tile, half), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((tile, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_irfft_kernel_body, n=n, radix=radix),
+        grid=(b // tile,),
+        in_specs=[in_spec, in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(re.astype(jnp.float32), im.astype(jnp.float32))
+
+
+# ------------------------------ 2D kernels --------------------------------
+
+
+def _fft2_kernel(re_ref, im_ref, out_re_ref, out_im_ref, *, radix: int):
     """Fused 2D FFT: row pass, in-VMEM corner turn, column pass, turn back.
 
     Beyond-paper fusion: the hardware needs RAM1/RAM2 + a second engine for
@@ -110,24 +399,33 @@ def _fft2_kernel(re_ref, im_ref, out_re_ref, out_im_ref):
     """
     h = re_ref.shape[-2]
     w = re_ref.shape[-1]
-    yr, yi = _stockham_panel(re_ref[0], im_ref[0], w)            # row pass
+    panel = _panel(radix)
+    yr, yi = panel(re_ref[0], im_ref[0], w)                      # row pass
     yr, yi = yr.swapaxes(-1, -2), yi.swapaxes(-1, -2)            # corner turn
-    yr, yi = _stockham_panel(yr, yi, h)                          # column pass
+    yr, yi = panel(yr, yi, h)                                    # column pass
     out_re_ref[0] = yr.swapaxes(-1, -2)
     out_im_ref[0] = yi.swapaxes(-1, -2)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fft2_fused(re: jax.Array, im: jax.Array, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("interpret", "radix"))
+def fft2_fused(
+    re: jax.Array, im: jax.Array, *, radix: int = 2, interpret: bool = False
+):
     """2D FFT of (F, H, W) frames, one frame per grid step, fully fused."""
     f, h, w = re.shape
     if (h & (h - 1)) or (w & (w - 1)):
         raise ValueError(f"power-of-two frame dims required, got {(h, w)}")
-    if h * w * 4 * 4 > _VMEM_BUDGET_BYTES:
-        raise ValueError(f"frame {(h, w)} exceeds the fused-kernel VMEM budget")
+    if not fft2_fits_vmem(h, w):
+        # The corner turn materialises transposed temporaries on top of the
+        # in/out/working panes; callers should check fft2_fits_vmem() and
+        # fail over to the unfused path rather than overflow VMEM.
+        raise ValueError(
+            f"frame {(h, w)} exceeds the fused-kernel VMEM budget "
+            f"({_FFT2_WORKING_ARRAYS} frame-sized arrays live at the corner turn)"
+        )
     spec = pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))
     return pl.pallas_call(
-        _fft2_kernel,
+        functools.partial(_fft2_kernel, radix=radix),
         grid=(f,),
         in_specs=[spec, spec],
         out_specs=[spec, spec],
@@ -135,5 +433,71 @@ def fft2_fused(re: jax.Array, im: jax.Array, *, interpret: bool = False):
             jax.ShapeDtypeStruct((f, h, w), jnp.float32),
             jax.ShapeDtypeStruct((f, h, w), jnp.float32),
         ],
+        interpret=interpret,
+    )(re.astype(jnp.float32), im.astype(jnp.float32))
+
+
+def _rfft2_kernel(x_ref, out_re_ref, out_im_ref, *, radix: int):
+    """Fused real-input 2D FFT: row rfft, corner turn, column FFT, turn back."""
+    h = x_ref.shape[-2]
+    w = x_ref.shape[-1]
+    yr, yi = _rfft_panel(x_ref[0], w, radix)                     # (H, W/2+1)
+    yr, yi = yr.swapaxes(-1, -2), yi.swapaxes(-1, -2)            # corner turn
+    yr, yi = _panel(radix)(yr, yi, h)                            # column pass
+    out_re_ref[0] = yr.swapaxes(-1, -2)
+    out_im_ref[0] = yi.swapaxes(-1, -2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "radix"))
+def rfft2_fused(x: jax.Array, *, radix: int = 2, interpret: bool = False):
+    """2D real-input FFT of (F, H, W) -> (F, H, W/2+1) re/im, fully fused."""
+    f, h, w = x.shape
+    if (h & (h - 1)) or (w & (w - 1)) or w < 2:
+        raise ValueError(f"power-of-two frame dims required, got {(h, w)}")
+    if not fft2_fits_vmem(h, w, arrays=6):
+        raise ValueError(f"frame {(h, w)} exceeds the fused-kernel VMEM budget")
+    in_spec = pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))
+    out_spec = pl.BlockSpec((1, h, w // 2 + 1), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_rfft2_kernel, radix=radix),
+        grid=(f,),
+        in_specs=[in_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((f, h, w // 2 + 1), jnp.float32),
+            jax.ShapeDtypeStruct((f, h, w // 2 + 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+
+
+def _irfft2_kernel(re_ref, im_ref, out_ref, *, n: int, radix: int):
+    """Inverse fused 2D: column IFFT (conj trick), turn, row irfft."""
+    h = re_ref.shape[-2]
+    yr, yi = re_ref[0].swapaxes(-1, -2), im_ref[0].swapaxes(-1, -2)
+    fr, fi = _panel(radix)(yr, -yi, h)                           # column IFFT
+    inv = 1.0 / h
+    yr, yi = fr * inv, -fi * inv
+    yr, yi = yr.swapaxes(-1, -2), yi.swapaxes(-1, -2)            # (H, W/2+1)
+    out_ref[0] = _irfft_panel(yr, yi, n, radix)                  # row irfft
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "radix"))
+def irfft2_fused(re: jax.Array, im: jax.Array, *, radix: int = 2, interpret: bool = False):
+    """Inverse of :func:`rfft2_fused`: (F, H, W/2+1) re/im -> real (F, H, W)."""
+    f, h, half = re.shape
+    w = 2 * (half - 1)
+    if (h & (h - 1)) or w < 2 or (w & (w - 1)):
+        raise ValueError(f"bad half-spectrum frame dims {(h, half)}")
+    if not fft2_fits_vmem(h, w, arrays=6):
+        raise ValueError(f"frame {(h, w)} exceeds the fused-kernel VMEM budget")
+    in_spec = pl.BlockSpec((1, h, half), lambda i: (i, 0, 0))
+    out_spec = pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_irfft2_kernel, n=w, radix=radix),
+        grid=(f,),
+        in_specs=[in_spec, in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((f, h, w), jnp.float32),
         interpret=interpret,
     )(re.astype(jnp.float32), im.astype(jnp.float32))

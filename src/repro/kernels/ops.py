@@ -7,6 +7,13 @@ interpret mode (the kernel body executes in Python — bit-identical logic).
   fft_kernel(x)    — fused 1D FFT (one HBM round trip)       [proposed]
   fft_staged(x)    — stage-at-a-time via the BU-array kernel [column-arch baseline]
   fft2_kernel(x)   — fused 2D FFT (row+turn+column in VMEM)  [beyond-paper fusion]
+  rfft_kernel(x)   — real-input 1D FFT, two-for-one packing  [half traffic]
+  rfft2_kernel(x)  — real-input fused 2D FFT                 [half traffic]
+
+All fused entry points take ``radix`` (2 or 4): radix-4 halves the in-VMEM
+stage count and the twiddle transcendentals. 2D entry points fail over to an
+unfused row/column composition when the frame's true working set exceeds the
+VMEM budget (``fft2_fits_vmem``) instead of overflowing it.
 """
 
 from __future__ import annotations
@@ -19,9 +26,27 @@ import jax.numpy as jnp
 
 from repro.core.fft1d import bit_reversal_permutation
 from repro.kernels.butterfly import butterfly_stage
-from repro.kernels.fft_radix2 import fft2_fused, fft_fused
+from repro.kernels.fft_radix2 import (
+    fft2_fits_vmem,
+    fft2_fused,
+    fft_fits_vmem,
+    fft_fused,
+    irfft2_fused,
+    irfft_fused,
+    rfft2_fused,
+    rfft_fused,
+)
 
-__all__ = ["fft_kernel", "fft_staged", "fft2_kernel", "hbm_traffic_model"]
+__all__ = [
+    "fft_kernel",
+    "fft_staged",
+    "fft2_kernel",
+    "rfft_kernel",
+    "irfft_kernel",
+    "rfft2_kernel",
+    "irfft2_kernel",
+    "hbm_traffic_model",
+]
 
 
 def _interpret_default() -> bool:
@@ -38,17 +63,17 @@ def _split(x: jax.Array):
 def _flatten_rows(x: jax.Array):
     lead = x.shape[:-1]
     n = x.shape[-1]
-    flat = int(jnp.prod(jnp.asarray(lead))) if lead else 1
+    flat = math.prod(lead) if lead else 1  # static shapes: stays trace-safe
     return x.reshape(flat, n), lead
 
 
-def fft_kernel(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+def fft_kernel(x: jax.Array, *, radix: int = 2, interpret: bool | None = None) -> jax.Array:
     """Fused-kernel FFT along the last axis (any leading batch dims)."""
     interpret = _interpret_default() if interpret is None else interpret
     re, im = _split(x)
     re2, lead = _flatten_rows(re)
     im2, _ = _flatten_rows(im)
-    yr, yi = fft_fused(re2, im2, interpret=interpret)
+    yr, yi = fft_fused(re2, im2, radix=radix, interpret=interpret)
     y = yr + 1j * yi
     return y.reshape(*lead, x.shape[-1])
 
@@ -69,24 +94,142 @@ def fft_staged(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
     return y.reshape(*lead, n)
 
 
-def fft2_kernel(x: jax.Array, *, interpret: bool | None = None) -> jax.Array:
-    """Fused-kernel 2D FFT of (..., H, W)."""
-    interpret = _interpret_default() if interpret is None else interpret
-    re, im = _split(x)
+def _frames(x: jax.Array):
     h, w = x.shape[-2], x.shape[-1]
     lead = x.shape[:-2]
     f = 1
     for d in lead:
         f *= d
-    yr, yi = fft2_fused(re.reshape(f, h, w), im.reshape(f, h, w), interpret=interpret)
+    return f, h, w, lead
+
+
+def _jnp_variant(radix: int) -> str:
+    return "radix4" if radix == 4 else "stockham"
+
+
+def _fft_rows(re: jax.Array, im: jax.Array, *, radix: int, interpret: bool):
+    """Last-axis complex FFT for the 2D failover paths: the fused kernel
+    when a row tile fits VMEM, the jnp engine otherwise — the failover
+    never overflows, whatever the frame geometry."""
+    if fft_fits_vmem(re.shape[-1]):
+        return fft_fused(re, im, radix=radix, interpret=interpret)
+    from repro.core.fft1d import fft  # lazy: core imports kernels
+
+    z = fft(re + 1j * im, variant=_jnp_variant(radix))
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def fft2_kernel(x: jax.Array, *, radix: int = 2, interpret: bool | None = None) -> jax.Array:
+    """Fused-kernel 2D FFT of (..., H, W); unfused failover for big frames."""
+    interpret = _interpret_default() if interpret is None else interpret
+    re, im = _split(x)
+    f, h, w, lead = _frames(x)
+    re, im = re.reshape(f, h, w), im.reshape(f, h, w)
+    if fft2_fits_vmem(h, w):
+        yr, yi = fft2_fused(re, im, radix=radix, interpret=interpret)
+    else:
+        # Frame working set exceeds VMEM: row pass, materialised corner
+        # turn, column pass — more HBM trips, but never an overflow.
+        yr, yi = _fft_rows(re.reshape(f * h, w), im.reshape(f * h, w),
+                           radix=radix, interpret=interpret)
+        yr = yr.reshape(f, h, w).swapaxes(-1, -2).reshape(f * w, h)
+        yi = yi.reshape(f, h, w).swapaxes(-1, -2).reshape(f * w, h)
+        yr, yi = _fft_rows(yr, yi, radix=radix, interpret=interpret)
+        yr = yr.reshape(f, w, h).swapaxes(-1, -2)
+        yi = yi.reshape(f, w, h).swapaxes(-1, -2)
     return (yr + 1j * yi).reshape(*lead, h, w)
 
 
-def hbm_traffic_model(batch: int, n: int, fused: bool) -> int:
+def rfft_kernel(x: jax.Array, *, radix: int = 2, interpret: bool | None = None) -> jax.Array:
+    """Real-input fused FFT along the last axis -> (..., N/2+1) complex."""
+    interpret = _interpret_default() if interpret is None else interpret
+    x = jnp.asarray(x)
+    re, lead = _flatten_rows(x.astype(jnp.float32))
+    yr, yi = rfft_fused(re, radix=radix, interpret=interpret)
+    return (yr + 1j * yi).reshape(*lead, x.shape[-1] // 2 + 1)
+
+
+def irfft_kernel(y: jax.Array, *, radix: int = 2, interpret: bool | None = None) -> jax.Array:
+    """Inverse of :func:`rfft_kernel`: (..., N/2+1) complex -> real (..., N)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    re, im = _split(y)
+    re2, lead = _flatten_rows(re)
+    im2, _ = _flatten_rows(im)
+    out = irfft_fused(re2, im2, radix=radix, interpret=interpret)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def rfft2_kernel(x: jax.Array, *, radix: int = 2, interpret: bool | None = None) -> jax.Array:
+    """Real-input fused 2D FFT of (..., H, W) -> (..., H, W/2+1) complex."""
+    interpret = _interpret_default() if interpret is None else interpret
+    x = jnp.asarray(x).astype(jnp.float32)
+    f, h, w, lead = _frames(x)
+    xf = x.reshape(f, h, w)
+    if fft2_fits_vmem(h, w, arrays=6):
+        yr, yi = rfft2_fused(xf, radix=radix, interpret=interpret)
+    else:
+        # Unfused failover: row rfft kernel, corner turn in HBM, column FFT.
+        # The column batch (f·(W/2+1) rows) is odd, which would force the
+        # fused kernel to a degenerate 1-row tile — the jnp engine handles
+        # that pass instead.
+        from repro.core.fft1d import fft  # lazy: core imports kernels
+
+        half = w // 2 + 1
+        if fft_fits_vmem(w):
+            yr, yi = rfft_fused(xf.reshape(f * h, w), radix=radix, interpret=interpret)
+            z = (yr + 1j * yi).reshape(f, h, half)
+        else:
+            from repro.core.rfft import rfft  # rows too long for any tile
+
+            z = rfft(xf.reshape(f * h, w), variant=_jnp_variant(radix))
+            z = z.reshape(f, h, half)
+        z = fft(z.swapaxes(-1, -2), variant=_jnp_variant(radix))
+        z = z.swapaxes(-1, -2)
+        return z.reshape(*lead, h, half)
+    return (yr + 1j * yi).reshape(*lead, h, w // 2 + 1)
+
+
+def irfft2_kernel(y: jax.Array, *, radix: int = 2, interpret: bool | None = None) -> jax.Array:
+    """Inverse of :func:`rfft2_kernel`: (..., H, W/2+1) -> real (..., H, W)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    re, im = _split(y)
+    f, h, half, lead = _frames(y)
+    w = 2 * (half - 1)
+    re, im = re.reshape(f, h, half), im.reshape(f, h, half)
+    if fft2_fits_vmem(h, w, arrays=6):
+        out = irfft2_fused(re, im, radix=radix, interpret=interpret)
+    else:
+        # Column IFFT via the jnp engine (the odd f·(W/2+1) column batch
+        # defeats the fused kernel's row tiling), then the fused row irfft.
+        from repro.core.fft1d import ifft  # lazy: core imports kernels
+
+        z = ifft((re + 1j * im).swapaxes(-1, -2), variant=_jnp_variant(radix))
+        z = z.swapaxes(-1, -2)
+        if fft_fits_vmem(w):
+            fr = jnp.real(z).astype(jnp.float32).reshape(f * h, half)
+            fi = jnp.imag(z).astype(jnp.float32).reshape(f * h, half)
+            out = irfft_fused(fr, fi, radix=radix, interpret=interpret)
+        else:
+            from repro.core.rfft import irfft  # rows too long for any tile
+
+            out = irfft(z.reshape(f * h, half), variant=_jnp_variant(radix))
+        out = out.reshape(f, h, w)
+    return out.reshape(*lead, h, w)
+
+
+def hbm_traffic_model(
+    batch: int, n: int, fused: bool, *, radix: int = 2, real: bool = False
+) -> int:
     """Bytes moved between HBM and VMEM (re+im f32, read+write per pass).
 
     fused: one round trip. staged: one per stage — the paper's α = 1/log2 N
-    shows up as traffic(fused)/traffic(staged).
+    shows up as traffic(fused)/traffic(staged). ``radix=4`` halves the pass
+    count of the staged path (4-point butterflies); ``real`` halves every
+    pass (N real samples in, N/2+1 complex bins out — the two-for-one pack).
     """
-    passes = 1 if fused else int(math.log2(n))
-    return passes * batch * n * 4 * 2 * 2
+    stages = int(math.log2(n))
+    passes = 1 if fused else math.ceil(stages / math.log2(radix))
+    per_pass = batch * n * 4 * 2 * 2
+    if real:
+        per_pass //= 2
+    return passes * per_pass

@@ -7,9 +7,15 @@ remembers the decision in a versioned JSON-backed cache.
 """
 
 from repro.plan.api import execute, plan_fft, resolve
-from repro.plan.autotune import chunk_candidates, estimate_plan, measure_plan
+from repro.plan.autotune import (
+    chunk_candidates,
+    estimate_plan,
+    measure_plan,
+    variant_candidates,
+)
 from repro.plan.cache import PlanCache, default_cache, reset_default_cache
 from repro.plan.plan import (
+    DIRECTIONS,
     KINDS,
     PLAN_SCHEMA_VERSION,
     PLAN_VARIANTS,
@@ -22,6 +28,7 @@ __all__ = [
     "FFTPlan",
     "ProblemKey",
     "PlanCache",
+    "DIRECTIONS",
     "KINDS",
     "PLAN_SCHEMA_VERSION",
     "PLAN_VARIANTS",
@@ -34,4 +41,5 @@ __all__ = [
     "problem_key",
     "reset_default_cache",
     "resolve",
+    "variant_candidates",
 ]

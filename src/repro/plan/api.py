@@ -30,6 +30,7 @@ def plan_fft(
     force: bool = False,
     measure_iters: int = 5,
     timings_out: Optional[Dict[str, float]] = None,
+    direction: str = "fwd",
 ) -> FFTPlan:
     """Plan one FFT problem; consult the cache first unless ``force``.
 
@@ -38,11 +39,14 @@ def plan_fft(
     timing them needs a live mesh). A MEASURE result replaces a cached
     ESTIMATE plan for the same key. File-backed caches are saved after
     every new plan so a second process re-tunes nothing.
+
+    ``direction="inv"`` plans the inverse transform, which tunes under its
+    own cache key (forward wisdom never cross-contaminates it).
     """
     if mode not in ("estimate", "measure"):
         raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
     cache = cache if cache is not None else default_cache()
-    key = problem_key(kind, shape, dtype, n_devices)
+    key = problem_key(kind, shape, dtype, n_devices, direction)
     # Pencil problems can't be timed without a live mesh: the best we can do
     # is the analytic model, so a cached ESTIMATE plan already is the answer.
     effective_mode = "estimate" if kind == "fft2d_pencil" else mode
@@ -66,6 +70,7 @@ def resolve(
     dtype: str = "complex64",
     n_devices: int = 1,
     cache: Optional[PlanCache] = None,
+    direction: str = "fwd",
 ) -> FFTPlan:
     """Cheap plan lookup for ``variant="auto"`` call sites (trace-safe).
 
@@ -74,7 +79,7 @@ def resolve(
     while JAX is tracing the surrounding computation.
     """
     cache = cache if cache is not None else default_cache()
-    key = problem_key(kind, shape, dtype, n_devices)
+    key = problem_key(kind, shape, dtype, n_devices, direction)
     hit = cache.get(key)
     if hit is not None:
         return hit
@@ -88,14 +93,23 @@ def execute(plan: FFTPlan, x, mesh=None, axis: str = "data"):
     ``n_devices`` refers to.
     """
     kind = plan.key.kind
+    inv = plan.key.direction == "inv"
     if kind == "fft1d":
-        from repro.core.fft1d import fft
+        from repro.core.fft1d import fft, ifft
 
-        return fft(x, variant=plan.variant)
+        return (ifft if inv else fft)(x, variant=plan.variant)
     if kind == "fft2d":
-        from repro.core.fft2d import fft2
+        from repro.core.fft2d import fft2, ifft2
 
-        return fft2(x, variant=plan.variant)
+        return (ifft2 if inv else fft2)(x, variant=plan.variant)
+    if kind == "rfft1d":
+        from repro.core.rfft import irfft, rfft
+
+        return (irfft if inv else rfft)(x, variant=plan.variant)
+    if kind == "rfft2d":
+        from repro.core.rfft import irfft2, rfft2
+
+        return (irfft2 if inv else rfft2)(x, variant=plan.variant)
     if kind == "fft2d_stream":
         from repro.core.fft2d import fft2_stream
 

@@ -12,10 +12,23 @@ roofline terms tie:
                    fuse across them; lowest per-stage overhead.
   * ``stockham`` — autosort: no bit-reversal gather and contiguous
                    reshapes only, so ~2/3 of the per-stage traffic.
+  * ``radix4``   — Stockham with 4-point butterflies: half the stage
+                   passes (≈ half the traffic) and ~15% fewer FLOPs
+                   (3 twiddle multiplies produce 4 outputs).
+  * ``fused``/``fused_r4`` — the Pallas whole-transform kernels: ONE HBM
+                   round trip on TPU. On other backends they execute in
+                   interpret mode (plain XLA ops), so they are modeled
+                   like their in-VMEM schedule plus launch overhead —
+                   which keeps ESTIMATE honest on CPU while letting the
+                   fused path dominate where it really does.
+
+Real-input kinds (``rfft1d``/``rfft2d``) halve both the butterfly count
+and the traffic: the two-for-one Hermitian pack runs ONE half-size
+complex FFT and touches half the bytes.
 
 The crossover this produces — ``unrolled`` for overhead-dominated small
-transforms, ``stockham`` once bandwidth dominates — matches what MEASURE
-finds on CPU and TPU for this repo's engines.
+transforms, the bandwidth-lean Stockham family once traffic dominates —
+matches what MEASURE finds on CPU and TPU for this repo's engines.
 
 MEASURE jits every candidate, times it (median of several runs, first
 call discarded so compile time never pollutes the comparison) and keeps
@@ -32,30 +45,100 @@ import numpy as np
 
 from repro.core.fft1d import butterfly_counts
 from repro.launch.roofline import Roofline
-from repro.plan.plan import PLAN_VARIANTS, FFTPlan, ProblemKey
+from repro.plan.plan import FFTPlan, ProblemKey
 
-__all__ = ["estimate_plan", "measure_plan", "chunk_candidates"]
+__all__ = [
+    "estimate_plan",
+    "measure_plan",
+    "chunk_candidates",
+    "variant_candidates",
+]
 
 # Real FLOPs per butterfly pass: one complex multiply (6) + two complex
 # add/sub (4) — the multiplier + 2 adders of the paper's butterfly unit.
 _FLOPS_PER_BUTTERFLY = 10.0
 
-# Bytes of HBM traffic per element per stage (complex64 = 8 B), per variant.
+# Radix-4 4-point butterflies: 3 complex multiplies + 8 add/sub per 4
+# outputs over 2 merged stages = 34 flops vs the radix-2 pair's 40.
+_RADIX4_FLOP_SCALE = 0.85
+
+# Bytes of HBM traffic per element per stage pass (complex64 = 8 B).
 # looped/unrolled: gather a, gather b, write top/bot concat, gather unperm
 # write-back -> ~6 element-touches; stockham: read + twiddle-mul + two
-# contiguous writes -> ~4.
-_TRAFFIC_FACTOR = {"looped": 6.0, "unrolled": 6.0, "stockham": 4.0}
+# contiguous writes -> ~4 (radix4 pays the same per pass but runs half
+# the passes); fused: one read + one write for the whole transform.
+_TRAFFIC_FACTOR = {
+    "looped": 6.0,
+    "unrolled": 6.0,
+    "stockham": 4.0,
+    "radix4": 4.0,
+    "fused": 4.0,
+    "fused_r4": 4.0,
+}
 
 # Per-stage dispatch overhead (seconds): sequential fori_loop iterations
 # cannot fuse; unrolled fuses best; stockham pays for reshape/concat.
-_STAGE_OVERHEAD_S = {"looped": 3.0e-6, "unrolled": 0.5e-6, "stockham": 0.8e-6}
+_STAGE_OVERHEAD_S = {
+    "looped": 3.0e-6,
+    "unrolled": 0.5e-6,
+    "stockham": 0.8e-6,
+    "radix4": 0.8e-6,
+    "fused": 0.8e-6,
+    "fused_r4": 0.8e-6,
+}
 
 # Fixed cost of entering a fori_loop with carried state (the register array).
 _LOOP_ENTRY_S = 5.0e-6
 
+# Fixed cost of a Pallas kernel launch; in interpret mode (non-TPU) the
+# kernel body is traced into XLA, costing grid bookkeeping on top.
+_KERNEL_LAUNCH_S = 2.0e-6
+_INTERPRET_OVERHEAD_S = 20.0e-6
+
 # CPU backends sit far off the TPU roofline constants; only the *ranking*
 # matters for planning, but scaling keeps est_time_s roughly honest.
 _BACKEND_SLOWDOWN = {"cpu": 40.0}
+
+#: Variants that run the transform as a single fused Pallas kernel.
+FUSED_VARIANTS = ("fused", "fused_r4")
+
+#: Kinds whose entry points can dispatch to the fused kernels.
+_FUSED_KINDS = ("fft1d", "fft2d", "rfft1d", "rfft2d")
+
+#: Real-input (two-for-one) kinds.
+_REAL_KINDS = ("rfft1d", "rfft2d")
+
+
+def _pow2(v: int) -> bool:
+    return v >= 2 and (v & (v - 1)) == 0
+
+
+def variant_candidates(key: ProblemKey) -> Tuple[str, ...]:
+    """Concrete schedules the planner may legally consider for ``key``.
+
+    Every kind sweeps the four jnp engines; the fused Pallas kernels join
+    for the kinds whose entry points dispatch to them (1D/2D, complex and
+    real) when the transform dims are powers of two, the problem is
+    single-device, and a 1D row tile can fit VMEM at all (the 2D kernels
+    have an unfused failover; the 1D ones refuse rows that cannot tile).
+    """
+    base = ("looped", "unrolled", "stockham", "radix4")
+    if key.kind not in _FUSED_KINDS or key.n_devices != 1:
+        return base
+    shape = key.shape
+    if key.kind in ("fft2d", "rfft2d"):
+        if len(shape) < 2:
+            return base
+        dims = shape[-2:]
+    else:
+        dims = shape[-1:]
+    if not all(_pow2(d) for d in dims):
+        return base
+    from repro.kernels.fft_radix2 import fft_fits_vmem  # lazy: pallas import
+
+    if not all(fft_fits_vmem(d) for d in dims):
+        return base
+    return base + FUSED_VARIANTS
 
 
 def _transform_geometry(key: ProblemKey) -> Tuple[int, int, int]:
@@ -66,7 +149,7 @@ def _transform_geometry(key: ProblemKey) -> Tuple[int, int, int]:
     total 1D transforms across both passes.
     """
     shape = key.shape
-    if key.kind == "fft1d":
+    if key.kind in ("fft1d", "rfft1d"):
         n = shape[-1]
         batch = int(np.prod(shape[:-1], dtype=np.int64)) if len(shape) > 1 else 1
         return n, 1, max(batch, 1)
@@ -78,14 +161,45 @@ def _transform_geometry(key: ProblemKey) -> Tuple[int, int, int]:
     return n, h, max(lead, 1) * (h + w)
 
 
+def _stage_passes(stages: int, variant: str) -> int:
+    """Butterfly passes over the data under ``variant``'s radix."""
+    if variant in ("radix4", "fused_r4"):
+        return max(1, math.ceil(stages / 2))
+    return stages
+
+
 def estimate_variant_time(key: ProblemKey, variant: str) -> float:
     """Roofline-model execution time (seconds) of one call under ``variant``."""
     n, _, n_transforms = _transform_geometry(key)
     counts = butterfly_counts(n, proposed=True)
     stages = counts["stages"]
+    passes = _stage_passes(stages, variant)
     # (N/2)·log2 N butterfly passes per transform (paper Tables 1 & 2).
     flops = _FLOPS_PER_BUTTERFLY * counts["butterfly_units"] * stages * n_transforms
-    traffic = _TRAFFIC_FACTOR[variant] * 8.0 * n * stages * n_transforms
+    if variant in ("radix4", "fused_r4"):
+        flops *= _RADIX4_FLOP_SCALE
+    fused = variant in FUSED_VARIANTS
+    on_tpu = key.backend == "tpu"
+    if fused and on_tpu:
+        # Whole transform on one VMEM residency: one HBM read + one write.
+        # Frames over the VMEM budget take the unfused row/turn/column
+        # failover instead — three round trips, not one.
+        trips = 1
+        if key.kind in ("fft2d", "rfft2d") and len(key.shape) >= 2:
+            from repro.kernels.fft_radix2 import fft2_fits_vmem  # lazy
+
+            arrays = 6 if key.kind == "rfft2d" else 8
+            if not fft2_fits_vmem(key.shape[-2], key.shape[-1], arrays=arrays):
+                trips = 3
+        traffic = _TRAFFIC_FACTOR[variant] * 8.0 * n * trips * n_transforms
+    else:
+        # jnp engines — and fused kernels in interpret mode, which execute
+        # as plain XLA ops and get no HBM fusion win.
+        traffic = _TRAFFIC_FACTOR[variant] * 8.0 * n * passes * n_transforms
+    if key.kind in _REAL_KINDS:
+        # Two-for-one Hermitian pack: one half-size transform, half the bytes.
+        flops *= 0.5
+        traffic *= 0.5
     # Pencil kind: the corner-turn moves each element once across the mesh.
     collective = 0.0
     if key.kind == "fft2d_pencil" and key.n_devices > 1:
@@ -98,7 +212,12 @@ def estimate_variant_time(key: ProblemKey, variant: str) -> float:
         model_flops_global=flops,
     )
     t = rl.step_time_s * _BACKEND_SLOWDOWN.get(key.backend, 1.0)
-    t += stages * _STAGE_OVERHEAD_S[variant]
+    if fused:
+        t += _KERNEL_LAUNCH_S
+        if not on_tpu:
+            t += _INTERPRET_OVERHEAD_S + passes * _STAGE_OVERHEAD_S[variant]
+    else:
+        t += passes * _STAGE_OVERHEAD_S[variant]
     if variant == "looped":
         t += _LOOP_ENTRY_S
     return t
@@ -159,7 +278,7 @@ def _estimate_unroll(key: ProblemKey) -> int:
 
 def estimate_plan(key: ProblemKey) -> FFTPlan:
     """Analytic (FFTW ``ESTIMATE``) plan: no device work, microseconds."""
-    times = {v: estimate_variant_time(key, v) for v in PLAN_VARIANTS}
+    times = {v: estimate_variant_time(key, v) for v in variant_candidates(key)}
     variant = min(times, key=times.get)
     return FFTPlan(
         key=key,
@@ -190,9 +309,17 @@ def _time_us(fn: Callable, x, warmup: int = 1, iters: int = 5) -> float:
 
 
 def _measure_input(key: ProblemKey, seed: int = 0):
+    """A representative input for ``key``: real for rfft kinds, complex
+    else; inverse real kinds get the half spectrum their runner consumes."""
     import jax.numpy as jnp
 
     rng = np.random.default_rng(seed)
+    if key.kind in _REAL_KINDS:
+        x = rng.standard_normal(key.shape).astype(np.float32)
+        if key.direction == "inv":
+            x = np.fft.rfft2(x).astype(np.complex64) if key.kind == "rfft2d" \
+                else np.fft.rfft(x).astype(np.complex64)
+        return jnp.asarray(x)
     x = (
         rng.standard_normal(key.shape) + 1j * rng.standard_normal(key.shape)
     ).astype(np.complex64)
@@ -205,15 +332,21 @@ def _candidate_runners(key: ProblemKey) -> Dict[Tuple[str, int], Callable]:
 
     import jax
 
-    from repro.core.fft1d import fft
-    from repro.core.fft2d import fft2, fft2_stream
+    from repro.core.fft1d import fft, ifft
+    from repro.core.fft2d import fft2, fft2_stream, ifft2
+    from repro.core.rfft import irfft, irfft2, rfft, rfft2
 
+    inv = key.direction == "inv"
+    entry = {
+        "fft1d": ifft if inv else fft,
+        "fft2d": ifft2 if inv else fft2,
+        "rfft1d": irfft if inv else rfft,
+        "rfft2d": irfft2 if inv else rfft2,
+    }
     runners: Dict[Tuple[str, int], Callable] = {}
-    for v in PLAN_VARIANTS:
-        if key.kind == "fft1d":
-            runners[(v, 1)] = jax.jit(functools.partial(fft, variant=v))
-        elif key.kind == "fft2d":
-            runners[(v, 1)] = jax.jit(functools.partial(fft2, variant=v))
+    for v in variant_candidates(key):
+        if key.kind in entry:
+            runners[(v, 1)] = jax.jit(functools.partial(entry[key.kind], variant=v))
         elif key.kind == "fft2d_stream":
             for u in (1, 2):
                 runners[(v, u)] = jax.jit(

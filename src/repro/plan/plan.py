@@ -19,13 +19,22 @@ from typing import Optional, Tuple
 
 #: Bumped whenever plan semantics change; embedded in every cache key so a
 #: stale on-disk cache can never hand an old-format plan to new code.
-PLAN_SCHEMA_VERSION = 1
+#: v2: radix-4 + fused kernel variants, real-input (rfft) problem kinds and
+#: the transform-direction key field — v1 wisdom tuned without these
+#: candidates is stale by construction, so bumping forces a re-tune.
+PLAN_SCHEMA_VERSION = 2
 
-#: Problem kinds the planner understands.
-KINDS = ("fft1d", "fft2d", "fft2d_stream", "fft2d_pencil")
+#: Problem kinds the planner understands (r* = real-input two-for-one).
+KINDS = ("fft1d", "fft2d", "fft2d_stream", "fft2d_pencil", "rfft1d", "rfft2d")
 
 #: Concrete 1D schedules a plan may select (never "auto").
-PLAN_VARIANTS = ("looped", "unrolled", "stockham")
+#: radix4 = radix-4 Stockham (half the stages/twiddles); fused/fused_r4 =
+#: the Pallas whole-transform-in-VMEM kernels (radix-2/radix-4 panels).
+PLAN_VARIANTS = ("looped", "unrolled", "stockham", "radix4", "fused", "fused_r4")
+
+#: Transform directions a ProblemKey may carry. Inverse transforms tune
+#: separately: their conjugation wrapper and 1/N scaling shift the optimum.
+DIRECTIONS = ("fwd", "inv")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,18 +52,23 @@ class ProblemKey:
     shape: Tuple[int, ...]
     dtype: str                 # canonical dtype name, e.g. "complex64"
     n_devices: int = 1
+    direction: str = "fwd"     # "fwd" | "inv" — inverse transforms tune apart
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown problem kind {self.kind!r}; want one of {KINDS}")
+        if self.direction not in DIRECTIONS:
+            raise ValueError(
+                f"unknown direction {self.direction!r}; want one of {DIRECTIONS}"
+            )
         object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
 
     def cache_key(self) -> str:
         """Stable, versioned string key for the plan cache."""
         shape = "x".join(str(s) for s in self.shape)
         return (
-            f"v{PLAN_SCHEMA_VERSION}|{self.kind}|{self.backend}|{self.device_kind}"
-            f"|{shape}|{self.dtype}|d{self.n_devices}"
+            f"v{PLAN_SCHEMA_VERSION}|{self.kind}|{self.direction}|{self.backend}"
+            f"|{self.device_kind}|{shape}|{self.dtype}|d{self.n_devices}"
         )
 
     def to_dict(self) -> dict:
@@ -65,6 +79,7 @@ class ProblemKey:
             "shape": list(self.shape),
             "dtype": self.dtype,
             "n_devices": self.n_devices,
+            "direction": self.direction,
         }
 
     @classmethod
@@ -76,6 +91,7 @@ class ProblemKey:
             shape=tuple(d["shape"]),
             dtype=d["dtype"],
             n_devices=int(d["n_devices"]),
+            direction=d.get("direction", "fwd"),
         )
 
 
@@ -146,6 +162,7 @@ def problem_key(
     shape: Tuple[int, ...],
     dtype: str = "complex64",
     n_devices: int = 1,
+    direction: str = "fwd",
 ) -> ProblemKey:
     """Build a :class:`ProblemKey` for the *current* JAX backend/device."""
     import jax
@@ -158,4 +175,5 @@ def problem_key(
         shape=tuple(shape),
         dtype=str(dtype),
         n_devices=int(n_devices),
+        direction=direction,
     )

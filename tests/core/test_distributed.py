@@ -33,7 +33,7 @@ from repro.plan import default_cache, problem_key
 got = np.asarray(fft2_pencil_overlapped(xs, mesh, variant="auto", chunks="auto"))
 assert np.max(np.abs(got - ref)) / scale < 1e-5, "auto pencil mismatch"
 plan = default_cache().get(problem_key("fft2d_pencil", (64, 32), n_devices=8))
-assert plan is not None and plan.variant in ("looped", "unrolled", "stockham")
+assert plan is not None and plan.variant in ("looped", "unrolled", "stockham", "radix4")
 assert 32 % plan.chunks == 0 and (32 // plan.chunks) % 8 == 0, plan.chunks
 
 xb = rng.standard_normal((3, 64, 64)).astype(np.float32)

@@ -1,0 +1,59 @@
+"""SpectrumService: plan-aware batched 2D-FFT serving over mixed frames."""
+
+import numpy as np
+import pytest
+
+from repro.serve import SpectrumRequest, SpectrumService
+
+
+def test_serves_mixed_real_and_complex_groups(rng):
+    reqs = [
+        SpectrumRequest(frame=rng.standard_normal((16, 16)).astype(np.float32))
+        for _ in range(3)
+    ]
+    reqs.append(
+        SpectrumRequest(
+            frame=(
+                rng.standard_normal((8, 8)) + 1j * rng.standard_normal((8, 8))
+            ).astype(np.complex64)
+        )
+    )
+    svc = SpectrumService()
+    out = svc.serve(reqs)
+    assert out is reqs and all(r.done for r in reqs)
+    # real frames -> two-for-one half spectrum
+    for r in reqs[:3]:
+        assert r.spectrum.shape == (16, 9)
+        np.testing.assert_allclose(
+            r.spectrum, np.fft.rfft2(np.asarray(r.frame)), atol=1e-3
+        )
+    # complex frame -> full spectrum
+    assert reqs[3].spectrum.shape == (8, 8)
+    np.testing.assert_allclose(
+        reqs[3].spectrum, np.fft.fft2(np.asarray(reqs[3].frame)), atol=1e-3
+    )
+
+
+def test_one_plan_per_group_is_memoized(rng):
+    svc = SpectrumService()
+    reqs = [
+        SpectrumRequest(frame=rng.standard_normal((8, 8)).astype(np.float32))
+        for _ in range(4)
+    ]
+    svc.serve(reqs)
+    assert len(svc.plans) == 1  # one shape group -> one plan
+    svc.serve(
+        [SpectrumRequest(frame=rng.standard_normal((8, 8)).astype(np.float32))
+         for _ in range(7)]
+    )
+    # a different batch count of the same frame shape reuses the plan:
+    # scheduling depends on frame geometry, not on arrival count
+    assert len(svc.plans) == 1
+
+
+def test_rejects_bad_inputs(rng):
+    svc = SpectrumService()
+    with pytest.raises(ValueError):
+        svc.serve([SpectrumRequest(frame=rng.standard_normal((4, 4, 4)))])
+    with pytest.raises(ValueError):
+        SpectrumService(plan_mode="exhaustive")
