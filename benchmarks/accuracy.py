@@ -6,8 +6,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+import repro.xfft as xfft
 from benchmarks.common import emit
-from repro.core.fft1d import fft
 from repro.kernels.ops import fft_kernel, fft_staged
 
 
@@ -20,10 +20,12 @@ def run():
         )
         ref = np.fft.fft(x.astype(np.complex128))
         scale = np.max(np.abs(ref))
+        for variant in ("looped", "unrolled", "stockham"):
+            with xfft.config(variant=variant):
+                got = np.asarray(xfft.fft(jnp.asarray(x)))
+            err = float(np.max(np.abs(got - ref)) / scale)
+            emit(f"accuracy_{variant}_N{n}", 0.0, f"max_rel_err={err:.2e}")
         for name, fn in (
-            ("looped", lambda v: fft(v, variant="looped")),
-            ("unrolled", lambda v: fft(v, variant="unrolled")),
-            ("stockham", lambda v: fft(v, variant="stockham")),
             ("kernel_fused", lambda v: fft_kernel(v, interpret=True)),
             ("kernel_staged", lambda v: fft_staged(v, interpret=True)),
         ):

@@ -23,7 +23,6 @@ is computed per size in ``speedup_real_vs_complex``.
 from __future__ import annotations
 
 import argparse
-import functools
 import json
 import sys
 
@@ -31,8 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fft2d import fft2
-from repro.core.rfft import rfft2
+import repro.xfft as xfft
 from repro.kernels.ops import hbm_traffic_model
 
 try:  # python -m benchmarks.fft_bench (repo root on sys.path)
@@ -40,12 +38,24 @@ try:  # python -m benchmarks.fft_bench (repo root on sys.path)
 except ImportError:  # python benchmarks/fft_bench.py (script dir on sys.path)
     from common import emit, time_fn
 
+
+def _cell(transform, variant):
+    """One benchmark cell: the xfft entry point under a scoped config
+    override (the post-ISSUE-3 way to pin an engine — no variant kwargs)."""
+
+    def run(x):
+        with xfft.config(variant=variant):
+            return transform(x)
+
+    return run
+
+
 #: (label, transform, radix, real) — the 2×2 radix×realness matrix.
 _CELLS = (
-    ("fft2/radix2", functools.partial(fft2, variant="stockham"), 2, False),
-    ("fft2/radix4", functools.partial(fft2, variant="radix4"), 4, False),
-    ("rfft2/radix2", functools.partial(rfft2, variant="stockham"), 2, True),
-    ("rfft2/radix4", functools.partial(rfft2, variant="radix4"), 4, True),
+    ("fft2/radix2", _cell(xfft.fft2, "stockham"), 2, False),
+    ("fft2/radix4", _cell(xfft.fft2, "radix4"), 4, False),
+    ("rfft2/radix2", _cell(xfft.rfft2, "stockham"), 2, True),
+    ("rfft2/radix4", _cell(xfft.rfft2, "radix4"), 4, True),
 )
 
 

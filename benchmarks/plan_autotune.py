@@ -15,7 +15,6 @@ every plan is a hit and nothing re-tunes.
 from __future__ import annotations
 
 import argparse
-import functools
 import json
 import os
 import sys
@@ -24,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fft2d import fft2
+import repro.xfft as xfft
 from repro.plan import PLAN_VARIANTS, plan_fft
 
 try:  # python -m benchmarks.plan_autotune (repo root on sys.path)
@@ -49,15 +48,19 @@ def bench_size(n: int, cache, mode: str) -> dict:
 
     fixed_us = {}
     for v in PLAN_VARIANTS:
-        fn = jax.jit(functools.partial(fft2, variant=v))
-        fixed_us[v] = time_fn(fn, x, warmup=1, iters=iters)
+        # A scoped config override pins the engine (applied at trace time).
+        def run(arr, _v=v):
+            with xfft.config(variant=_v):
+                return xfft.fft2(arr)
+
+        fixed_us[v] = time_fn(jax.jit(run), x, warmup=1, iters=iters)
 
     timings = {}
     plan = plan_fft("fft2d", (n, n), mode=mode, cache=cache,
                     measure_iters=iters, timings_out=timings)
 
-    # variant="auto" resolves through the (now warm) cache inside the trace.
-    auto_fn = jax.jit(lambda v: fft2(v, variant="auto"))
+    # a bare xfft call resolves through the (now warm) cache inside the trace.
+    auto_fn = jax.jit(lambda v: xfft.fft2(v))
     auto_us = time_fn(auto_fn, x, warmup=1, iters=iters)
 
     worst = max(fixed_us.values())

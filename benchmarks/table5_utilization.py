@@ -17,12 +17,12 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core.fft1d import fft
+from repro.core.fft1d import fft_impl
 from repro.kernels.ops import hbm_traffic_model
 
 
 def _compiled_stats(variant: str, n: int, batch: int = 64):
-    fn = jax.jit(lambda x: fft(x, variant=variant))
+    fn = jax.jit(lambda x: fft_impl(x, variant=variant))
     x = jax.ShapeDtypeStruct((batch, n), jnp.complex64)
     compiled = fn.lower(x).compile()
     mem = compiled.memory_analysis()

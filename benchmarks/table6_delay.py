@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.xfft as xfft
 from benchmarks.common import emit, time_fn
-from repro.core.fft2d import fft2
 
 
 def run():
@@ -18,8 +18,14 @@ def run():
     rng = np.random.default_rng(0)
     for hw, batch in (((8, 8), 64), ((64, 64), 16), ((256, 256), 2)):
         x = jnp.asarray(rng.standard_normal((batch, *hw)), jnp.float32)
-        f_loop = jax.jit(lambda v: fft2(v, variant="looped"))
-        f_unroll = jax.jit(lambda v: fft2(v, variant="unrolled"))
+        def _fft2_with(variant):
+            def run(v):
+                with xfft.config(variant=variant):
+                    return xfft.fft2(v)
+            return jax.jit(run)
+
+        f_loop = _fft2_with("looped")
+        f_unroll = _fft2_with("unrolled")
         us_l = time_fn(f_loop, x)
         us_u = time_fn(f_unroll, x)
         ratio = us_l / us_u

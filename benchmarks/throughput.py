@@ -7,8 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.xfft as xfft
 from benchmarks.common import emit, time_fn
-from repro.core.fft2d import fft2, fft2_stream
+from repro.core.fft2d import fft2_stream
 from repro.kernels.ops import fft2_kernel
 
 
@@ -17,8 +18,12 @@ def run():
     rng = np.random.default_rng(0)
     frames = jnp.asarray(rng.standard_normal((16, 128, 128)), jnp.float32)
 
+    def _seq(f):
+        with xfft.config(variant="stockham"):
+            return xfft.fft2(f)
+
     stream = jax.jit(lambda f: fft2_stream(f, variant="stockham"))
-    seq = jax.jit(lambda f: fft2(f, variant="stockham"))
+    seq = jax.jit(_seq)
 
     us_stream = time_fn(stream, frames)
     us_seq = time_fn(seq, frames)

@@ -16,7 +16,8 @@ arithmetic and HBM traffic of the complex transform, same peak.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import correlate2, fft2, fftshift2, ifft2, rfft2
+import repro.xfft as xfft
+from repro.core import correlate2
 
 
 def make_scene(hw: int = 128, seed: int = 0):
@@ -36,18 +37,19 @@ def make_scene(hw: int = 128, seed: int = 0):
 def main():
     scene, template, true_pos = make_scene()
 
-    # Real-input matched filter: rfft2 → conj-multiply → irfft2 (auto-planned).
-    corr = np.asarray(correlate2(jnp.asarray(scene), jnp.asarray(template),
-                                 variant="auto"))
+    # Real-input matched filter: rfft2 → conj-multiply → irfft2 (plan-backed
+    # by default — no variant kwarg needed anywhere anymore).
+    corr = np.asarray(correlate2(jnp.asarray(scene), jnp.asarray(template)))
     peak = np.unravel_index(corr.argmax(), corr.shape)
     print(f"true position {true_pos}, detected {tuple(int(p) for p in peak)}")
     ok = abs(peak[0] - true_pos[0]) <= 1 and abs(peak[1] - true_pos[1]) <= 1
     print("matched-filter detection (real two-for-one path):", "OK" if ok else "FAILED")
 
-    # Cross-check: the full complex pipeline finds the same peak.
-    fs = fft2(jnp.asarray(scene))
-    ft = fft2(jnp.asarray(template))
-    corr_c = np.asarray(jnp.real(ifft2(fs * jnp.conj(ft))))
+    # Cross-check: the full complex pipeline finds the same peak (xfft
+    # namespace, plan-backed — no variant kwargs anywhere).
+    fs = xfft.fft2(jnp.asarray(scene).astype(np.complex64))
+    ft = xfft.fft2(jnp.asarray(template).astype(np.complex64))
+    corr_c = np.asarray(jnp.real(xfft.ifft2(fs * jnp.conj(ft))))
     peak_c = np.unravel_index(corr_c.argmax(), corr_c.shape)
     agree = tuple(int(p) for p in peak) == tuple(int(p) for p in peak_c)
     print(f"complex-path peak agrees: {agree} "
@@ -56,9 +58,9 @@ def main():
     # Power spectrum (holography-style display, DC centred). The half
     # spectrum from rfft2 suffices for the display's left half; the full
     # surface comes from the complex transform for the centred view.
-    half = np.asarray(jnp.abs(rfft2(jnp.asarray(scene))))
+    half = np.asarray(jnp.abs(xfft.rfft2(jnp.asarray(scene))))
     print(f"rfft2 half-spectrum shape: {half.shape} (vs full {fs.shape})")
-    ps = np.asarray(jnp.abs(fftshift2(fs)))
+    ps = np.asarray(jnp.abs(xfft.fftshift2(fs)))
     print(f"scene power-spectrum peak at centre: "
           f"{bool(ps[64, 64] == ps.max() or ps.max() > 0)}")
     if not (ok and agree):

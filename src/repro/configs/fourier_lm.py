@@ -16,6 +16,6 @@ CONFIG = ModelConfig(
     vocab=32768,
     act="gelu",
     seq_pad_to_pow2=True,
-    fft_variant="looped",
+    fft_variant="auto",
     subquadratic=True,     # O(L log L) mixing
 )

@@ -16,7 +16,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.models.config import MLAConfig, ModelConfig, SSMConfig
 
 _MODULES = {
     "whisper-medium": "whisper_medium",

@@ -7,7 +7,7 @@ from repro.core.fft1d import (
     fft_routing_tables,
     ifft,
 )
-from repro.core.fft2d import fft2, fft2_stream, fftshift2, ifft2
+from repro.core.fft2d import fft2, fft2_stream, fftshift2, ifft2, ifftshift2
 from repro.core.rfft import irfft, irfft2, rfft, rfft2
 from repro.core.spectral import correlate2, fftconv, fourier_mixing, log_mel, stft
 
@@ -20,6 +20,7 @@ __all__ = [
     "fft2",
     "fft2_stream",
     "fftshift2",
+    "ifftshift2",
     "ifft2",
     "rfft",
     "irfft",

@@ -1,0 +1,30 @@
+"""Warn-once plumbing for the deprecated ``repro.core`` transform entry
+points. The implementations live on (as the ``*_impl`` functions the xfft
+front door and the planner dispatch to); only the public per-call
+``variant=`` surface is deprecated in favour of ``repro.xfft``.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Set
+
+_WARNED: Set[str] = set()
+
+
+def warn_deprecated(old: str, new: str, *, stacklevel: int = 3) -> None:
+    """Emit one DeprecationWarning per entry point per process."""
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
+    warnings.warn(
+        f"{old} is deprecated; call {new} instead (engine selection now "
+        "lives in repro.plan / repro.xfft.config, not per-call kwargs)",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+
+
+def reset_warnings() -> None:
+    """Forget which warnings fired (tests)."""
+    _WARNED.clear()

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.fft1d import Variant, fft
+from repro.core.fft1d import Variant, fft_impl
 
 __all__ = ["fft2_pencil", "fft2_pencil_overlapped", "pencil_sharding"]
 
@@ -71,9 +71,9 @@ def fft2_pencil(
         out_specs=P(*lead, None, axis),
     )
     def _run(block):
-        rows = fft(block, axis=-1, variant=variant)       # engine 1 (local)
+        rows = fft_impl(block, axis=-1, variant=variant)       # engine 1 (local)
         turned = _corner_turn(rows, axis, d)              # RAM handoff
-        return fft(turned, axis=-2, variant=variant)      # engine 2 (local)
+        return fft_impl(turned, axis=-2, variant=variant)      # engine 2 (local)
 
     return _run(x.astype(jnp.complex64))
 
@@ -118,12 +118,12 @@ def fft2_pencil_overlapped(
         out_specs=P(*lead, None, None, axis),
     )
     def _run(block):
-        rows = fft(block, axis=-1, variant=variant)
+        rows = fft_impl(block, axis=-1, variant=variant)
         outs = []
         for c in range(chunks):
             slab = jax.lax.slice_in_dim(rows, c * slab_w, (c + 1) * slab_w, axis=-1)
             turned = _corner_turn(slab, axis, d)          # (..., H, slab_w/d)
-            outs.append(fft(turned, axis=-2, variant=variant))
+            outs.append(fft_impl(turned, axis=-2, variant=variant))
         return jnp.stack(outs, axis=-2)                   # (..., H, chunks, slab_w/d)
 
     y = _run(x.astype(jnp.complex64))

@@ -25,17 +25,24 @@ JAX mapping (see DESIGN.md §2):
 
 All variants compute the same DFT and are tested against each other and a
 float64 DFT oracle.
+
+Public transform calls belong to ``repro.xfft`` (plan-backed dispatch, no
+per-call variant kwargs); this module keeps the engines themselves
+(``fft_impl``/``ifft_impl`` plus the per-variant bodies) and warn-once
+deprecation shims under the old names.
 """
 
 from __future__ import annotations
 
 import functools
 import math
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core._deprecation import warn_deprecated
 
 Variant = Literal[
     "looped", "unrolled", "stockham", "radix4", "fused", "fused_r4", "auto"
@@ -50,10 +57,31 @@ __all__ = [
 ]
 
 
-def _check_pow2(n: int) -> int:
+def _check_pow2(n: int, axis: Optional[int] = None) -> int:
+    """log2(n), or a ValueError that names the offending axis and size.
+
+    The one pow2 error contract for the whole stack: ``repro.xfft`` and
+    the engine entries both validate through here, so the message (the
+    ISSUE-3 satellite wording) can never drift between layers.
+    """
     if n < 2 or (n & (n - 1)) != 0:
+        if axis is not None:
+            raise ValueError(
+                f"axis {axis} has length {n}; xfft requires a power of "
+                "two >= 2"
+            )
         raise ValueError(f"radix-2 FFT needs a power-of-two length, got {n}")
     return int(math.log2(n))
+
+
+def canonical_axis(axis: int, ndim: int, name: str = "fft") -> int:
+    """Normalize ``axis`` into [0, ndim), naming the axis in the error."""
+    if not -ndim <= axis < ndim:
+        raise ValueError(
+            f"{name}: axis {axis} is out of bounds for an array of "
+            f"dimension {ndim}"
+        )
+    return axis % ndim
 
 
 @functools.lru_cache(maxsize=64)
@@ -245,18 +273,22 @@ def _fft_radix4(x: jax.Array, n: int) -> jax.Array:
     return y.reshape(*batch, n)
 
 
-def fft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
+def fft_impl(x: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Array:
     """Radix-2 FFT along ``axis``. Input real or complex; returns complex64.
 
-    ``variant="auto"`` resolves the schedule through ``repro.plan`` (cached
-    MEASURE plan if one was tuned for this shape, analytic ESTIMATE else).
+    This is the engine entry the xfft front door and the planner dispatch
+    to; ``variant="auto"`` resolves the schedule through ``repro.plan``
+    (cached MEASURE plan if one was tuned for this shape, analytic
+    ESTIMATE else, scoped ``repro.xfft.config`` overrides applied).
     """
     x = jnp.asarray(x)
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
     elif x.dtype != jnp.complex64:
         x = x.astype(jnp.complex64)
-    axis = axis % x.ndim
+    user_axis = axis
+    axis = canonical_axis(axis, x.ndim)
+    _check_pow2(x.shape[axis], axis=user_axis)
     if axis != x.ndim - 1:
         x = jnp.moveaxis(x, axis, -1)
     n = x.shape[-1]
@@ -283,10 +315,10 @@ def fft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
     return y
 
 
-def ifft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array:
+def ifft_impl(x: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Array:
     """Inverse FFT via the conjugation identity (shares the forward engine)."""
     x = jnp.asarray(x).astype(jnp.complex64)
-    axis_n = axis % x.ndim
+    axis_n = canonical_axis(axis, x.ndim)
     n = x.shape[axis_n]
     if variant == "auto":
         from repro.plan.api import resolve  # lazy: plan imports core
@@ -296,4 +328,35 @@ def ifft(x: jax.Array, axis: int = -1, variant: Variant = "looped") -> jax.Array
         # shape (transform axis last), matching the forward convention.
         key_shape = x.shape[:axis_n] + x.shape[axis_n + 1:] + (n,)
         variant = resolve("fft1d", key_shape, direction="inv").variant
-    return jnp.conj(fft(jnp.conj(x), axis=axis, variant=variant)) / n
+    return jnp.conj(fft_impl(jnp.conj(x), axis=axis, variant=variant)) / n
+
+
+def fft(
+    x: jax.Array, axis: int = -1, variant: Optional[Variant] = None
+) -> jax.Array:
+    """Deprecated alias of :func:`repro.xfft.fft` (kept for old call sites).
+
+    The per-call ``variant=`` kwarg is superseded by plan-backed dispatch:
+    ``None``/``"auto"`` lets ``repro.plan`` pick; a concrete variant is
+    honoured by scoping a ``repro.xfft.config`` override around the call.
+    """
+    warn_deprecated("repro.core.fft1d.fft", "repro.xfft.fft")
+    from repro import xfft  # lazy: xfft builds on this module
+
+    if variant is None or variant == "auto":
+        return xfft.fft(x, axis=axis)
+    with xfft.config(variant=variant):
+        return xfft.fft(x, axis=axis)
+
+
+def ifft(
+    x: jax.Array, axis: int = -1, variant: Optional[Variant] = None
+) -> jax.Array:
+    """Deprecated alias of :func:`repro.xfft.ifft` (kept for old call sites)."""
+    warn_deprecated("repro.core.fft1d.ifft", "repro.xfft.ifft")
+    from repro import xfft  # lazy: xfft builds on this module
+
+    if variant is None or variant == "auto":
+        return xfft.ifft(x, axis=axis)
+    with xfft.config(variant=variant):
+        return xfft.ifft(x, axis=axis)

@@ -15,14 +15,15 @@ buffer rotation is the scan carry.
 
 from __future__ import annotations
 
-from typing import Literal, Union
+from typing import Literal, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.fft1d import Variant, fft, ifft
+from repro.core._deprecation import warn_deprecated
+from repro.core.fft1d import Variant, fft_impl, ifft_impl
 
-__all__ = ["fft2", "ifft2", "fft2_stream", "fftshift2"]
+__all__ = ["fft2", "ifft2", "fft2_stream", "fftshift2", "ifftshift2"]
 
 
 def _resolve_2d(kind: str, shape, variant: Variant, direction: str = "fwd") -> Variant:
@@ -35,7 +36,7 @@ def _resolve_2d(kind: str, shape, variant: Variant, direction: str = "fwd") -> V
     return resolve(kind, tuple(shape), direction=direction).variant
 
 
-def fft2(x: jax.Array, variant: Variant = "looped") -> jax.Array:
+def fft2_impl(x: jax.Array, variant: Variant = "auto") -> jax.Array:
     """2D FFT over the last two axes: row pass then column pass (paper fig. 1)."""
     variant = _resolve_2d("fft2d", jnp.shape(x), variant)
     if variant in ("fused", "fused_r4"):
@@ -44,20 +45,42 @@ def fft2(x: jax.Array, variant: Variant = "looped") -> jax.Array:
         # Whole-frame VMEM residency (with built-in failover to an unfused
         # row/turn/column composition when the frame exceeds the budget).
         return fft2_kernel(x, radix=4 if variant == "fused_r4" else 2)
-    y = fft(x, axis=-1, variant=variant)   # first 1D FFT block (rows)
-    return fft(y, axis=-2, variant=variant)  # second 1D FFT block (columns)
+    y = fft_impl(x, axis=-1, variant=variant)   # first 1D FFT block (rows)
+    return fft_impl(y, axis=-2, variant=variant)  # second 1D FFT block (columns)
 
 
-def ifft2(x: jax.Array, variant: Variant = "looped") -> jax.Array:
+def ifft2_impl(x: jax.Array, variant: Variant = "auto") -> jax.Array:
     # Inverse transforms plan under their own direction key ("inv") so
     # forward-tuned wisdom never cross-contaminates them.
     variant = _resolve_2d("fft2d", jnp.shape(x), variant, direction="inv")
     if variant in ("fused", "fused_r4"):
         x = jnp.asarray(x)
         h, w = x.shape[-2], x.shape[-1]
-        return jnp.conj(fft2(jnp.conj(x), variant=variant)) / (h * w)
-    y = ifft(x, axis=-1, variant=variant)
-    return ifft(y, axis=-2, variant=variant)
+        return jnp.conj(fft2_impl(jnp.conj(x), variant=variant)) / (h * w)
+    y = ifft_impl(x, axis=-1, variant=variant)
+    return ifft_impl(y, axis=-2, variant=variant)
+
+
+def fft2(x: jax.Array, variant: Optional[Variant] = None) -> jax.Array:
+    """Deprecated alias of :func:`repro.xfft.fft2` (kept for old call sites)."""
+    warn_deprecated("repro.core.fft2d.fft2", "repro.xfft.fft2")
+    from repro import xfft  # lazy: xfft builds on this module
+
+    if variant is None or variant == "auto":
+        return xfft.fft2(x)
+    with xfft.config(variant=variant):
+        return xfft.fft2(x)
+
+
+def ifft2(x: jax.Array, variant: Optional[Variant] = None) -> jax.Array:
+    """Deprecated alias of :func:`repro.xfft.ifft2` (kept for old call sites)."""
+    warn_deprecated("repro.core.fft2d.ifft2", "repro.xfft.ifft2")
+    from repro import xfft  # lazy: xfft builds on this module
+
+    if variant is None or variant == "auto":
+        return xfft.ifft2(x)
+    with xfft.config(variant=variant):
+        return xfft.ifft2(x)
 
 
 def fftshift2(x: jax.Array) -> jax.Array:
@@ -65,9 +88,22 @@ def fftshift2(x: jax.Array) -> jax.Array:
     return jnp.roll(x, shift=(x.shape[-2] // 2, x.shape[-1] // 2), axis=(-2, -1))
 
 
+def ifftshift2(x: jax.Array) -> jax.Array:
+    """Exact inverse of :func:`fftshift2`.
+
+    Rolls by the *negated* half sizes: for even H/W that equals another
+    ``fftshift2``, but for odd lengths (framing code pads to arbitrary
+    sizes even though the engines are pow2-only) the half-size roll is not
+    self-inverse and the sign matters.
+    """
+    return jnp.roll(
+        x, shift=(-(x.shape[-2] // 2), -(x.shape[-1] // 2)), axis=(-2, -1)
+    )
+
+
 def fft2_stream(
     frames: jax.Array,
-    variant: Variant = "looped",
+    variant: Variant = "auto",
     unroll: Union[int, Literal["auto"]] = 1,
 ) -> jax.Array:
     """Streaming 2D FFT over ``frames[t, H, W]`` with ping-pong double buffering.
@@ -95,9 +131,9 @@ def fft2_stream(
 
     def step(ram, frame):
         # Engine 1: row FFTs of the incoming frame -> the "write" RAM.
-        row_done = fft(frame, axis=-1, variant=variant)
+        row_done = fft_impl(frame, axis=-1, variant=variant)
         # Engine 2 (concurrent): column FFTs of the previous frame's rows.
-        out = fft(ram, axis=-2, variant=variant)
+        out = fft_impl(ram, axis=-2, variant=variant)
         return row_done, out
 
     drain = jnp.zeros_like(frames[:1])

@@ -13,19 +13,23 @@ spectra with the symmetry recombination
 — is the software twin of the paper's area reuse: the same butterfly engine,
 half the stages' worth of data.
 
-Entry points mirror ``fft``/``ifft``/``fft2``/``ifft2`` and accept every
-engine variant, including ``"fused"``/``"fused_r4"`` (the Pallas kernels,
-which run the pack + half-size panel + recombination in one VMEM residency)
-and ``"auto"`` (planned through ``repro.plan`` under the ``rfft1d``/
-``rfft2d`` problem kinds).
+The ``*_impl`` functions are the engine entries (any variant, including
+``"fused"``/``"fused_r4"`` — the Pallas kernels that run the pack +
+half-size panel + recombination in one VMEM residency — and ``"auto"``,
+planned through ``repro.plan`` under the ``rfft1d``/``rfft2d`` problem
+kinds). The public names are deprecated aliases of the ``repro.xfft``
+front door, which adds ``norm=`` conventions and plan-backed dispatch.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.fft1d import Variant, fft, ifft
+from repro.core._deprecation import warn_deprecated
+from repro.core.fft1d import Variant, _check_pow2, fft_impl, ifft_impl
 
 __all__ = ["rfft", "irfft", "rfft2", "irfft2"]
 
@@ -55,7 +59,7 @@ def _rfft_jnp(x: jax.Array, n: int, variant: Variant) -> jax.Array:
     """Pack N reals as N/2 complex, half-size FFT, symmetry recombination."""
     m = n // 2
     z = (x[..., 0::2] + 1j * x[..., 1::2]).astype(jnp.complex64)
-    zf = fft(z, variant=variant) if m > 1 else z
+    zf = fft_impl(z, variant=variant) if m > 1 else z
     k = jnp.arange(m + 1)
     zk = jnp.take(zf, k % m, axis=-1)               # Z[k], with Z[M] = Z[0]
     zmk = jnp.conj(jnp.take(zf, (-k) % m, axis=-1))  # conj(Z[(M-k) mod M])
@@ -78,21 +82,21 @@ def _irfft_jnp(y: jax.Array, n: int, variant: Variant) -> jax.Array:
     xe = 0.5 * (yk + ymk)
     xo = 0.5 * (yk - ymk) * jnp.exp(2j * jnp.pi * k / n).astype(jnp.complex64)
     z = xe + 1j * xo
-    zi = ifft(z, variant=variant) if m > 1 else z
+    zi = ifft_impl(z, variant=variant) if m > 1 else z
     out = jnp.stack([jnp.real(zi), jnp.imag(zi)], axis=-1)
     return out.reshape(*zi.shape[:-1], n).astype(jnp.float32)
 
 
-def rfft(x: jax.Array, axis: int = -1, variant: Variant = "stockham") -> jax.Array:
+def rfft_impl(x: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Array:
     """Real-input FFT along ``axis`` -> non-redundant half spectrum
     (..., N/2+1) complex64. N must be a power of two >= 2."""
     x = _check_real(x, "rfft")
+    user_axis = axis
     axis = axis % x.ndim
     if axis != x.ndim - 1:
         x = jnp.moveaxis(x, axis, -1)
     n = x.shape[-1]
-    if n < 2 or n & (n - 1):
-        raise ValueError(f"rfft needs a power-of-two length >= 2, got {n}")
+    _check_pow2(n, axis=user_axis)
     variant = _resolve("rfft1d", x.shape, variant)
     if variant in _FUSED:
         from repro.kernels.ops import rfft_kernel  # lazy: kernels import core
@@ -105,17 +109,18 @@ def rfft(x: jax.Array, axis: int = -1, variant: Variant = "stockham") -> jax.Arr
     return y
 
 
-def irfft(y: jax.Array, axis: int = -1, variant: Variant = "stockham") -> jax.Array:
-    """Inverse of :func:`rfft`: (..., N/2+1) half spectrum -> real (..., N)."""
+def irfft_impl(y: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Array:
+    """Inverse of :func:`rfft_impl`: (..., N/2+1) half spectrum -> real (..., N)."""
     y = jnp.asarray(y).astype(jnp.complex64)
+    user_axis = axis
     axis = axis % y.ndim
     if axis != y.ndim - 1:
         y = jnp.moveaxis(y, axis, -1)
     n = 2 * (y.shape[-1] - 1)
     if n < 2 or n & (n - 1):
         raise ValueError(
-            f"irfft needs a half spectrum of width N/2+1 with N a power of "
-            f"two, got width {y.shape[-1]}"
+            f"axis {user_axis} has a half spectrum of width {y.shape[-1]}; "
+            "irfft requires width N/2+1 with N a power of two"
         )
     variant = _resolve("rfft1d", y.shape[:-1] + (n,), variant, direction="inv")
     if variant in _FUSED:
@@ -129,7 +134,7 @@ def irfft(y: jax.Array, axis: int = -1, variant: Variant = "stockham") -> jax.Ar
     return out
 
 
-def rfft2(x: jax.Array, variant: Variant = "stockham") -> jax.Array:
+def rfft2_impl(x: jax.Array, variant: Variant = "auto") -> jax.Array:
     """2D real-input FFT over the last two axes: row rfft then full column
     FFT -> (..., H, W/2+1) complex64."""
     x = _check_real(x, "rfft2")
@@ -138,19 +143,70 @@ def rfft2(x: jax.Array, variant: Variant = "stockham") -> jax.Array:
         from repro.kernels.ops import rfft2_kernel  # lazy: kernels import core
 
         return rfft2_kernel(x, radix=_radix(variant))
-    y = rfft(x, axis=-1, variant=variant)
-    return fft(y, axis=-2, variant=variant)
+    y = rfft_impl(x, axis=-1, variant=variant)
+    return fft_impl(y, axis=-2, variant=variant)
 
 
-def irfft2(y: jax.Array, variant: Variant = "stockham") -> jax.Array:
-    """Inverse of :func:`rfft2`: (..., H, W/2+1) -> real (..., H, W)."""
+def irfft2_impl(y: jax.Array, variant: Variant = "auto") -> jax.Array:
+    """Inverse of :func:`rfft2_impl`: (..., H, W/2+1) -> real (..., H, W)."""
     y = jnp.asarray(y).astype(jnp.complex64)
-    h, half = y.shape[-2], y.shape[-1]
+    half = y.shape[-1]
     w = 2 * (half - 1)
     variant = _resolve("rfft2d", y.shape[:-1] + (w,), variant, direction="inv")
     if variant in _FUSED:
         from repro.kernels.ops import irfft2_kernel  # lazy: kernels import core
 
         return irfft2_kernel(y, radix=_radix(variant))
-    z = ifft(y, axis=-2, variant=variant)
-    return irfft(z, axis=-1, variant=variant)
+    z = ifft_impl(y, axis=-2, variant=variant)
+    return irfft_impl(z, axis=-1, variant=variant)
+
+
+# --------------------- deprecated public entry points ---------------------
+
+
+def rfft(
+    x: jax.Array, axis: int = -1, variant: Optional[Variant] = None
+) -> jax.Array:
+    """Deprecated alias of :func:`repro.xfft.rfft` (kept for old call sites)."""
+    warn_deprecated("repro.core.rfft.rfft", "repro.xfft.rfft")
+    from repro import xfft  # lazy: xfft builds on this module
+
+    if variant is None or variant == "auto":
+        return xfft.rfft(x, axis=axis)
+    with xfft.config(variant=variant):
+        return xfft.rfft(x, axis=axis)
+
+
+def irfft(
+    y: jax.Array, axis: int = -1, variant: Optional[Variant] = None
+) -> jax.Array:
+    """Deprecated alias of :func:`repro.xfft.irfft` (kept for old call sites)."""
+    warn_deprecated("repro.core.rfft.irfft", "repro.xfft.irfft")
+    from repro import xfft  # lazy: xfft builds on this module
+
+    if variant is None or variant == "auto":
+        return xfft.irfft(y, axis=axis)
+    with xfft.config(variant=variant):
+        return xfft.irfft(y, axis=axis)
+
+
+def rfft2(x: jax.Array, variant: Optional[Variant] = None) -> jax.Array:
+    """Deprecated alias of :func:`repro.xfft.rfft2` (kept for old call sites)."""
+    warn_deprecated("repro.core.rfft.rfft2", "repro.xfft.rfft2")
+    from repro import xfft  # lazy: xfft builds on this module
+
+    if variant is None or variant == "auto":
+        return xfft.rfft2(x)
+    with xfft.config(variant=variant):
+        return xfft.rfft2(x)
+
+
+def irfft2(y: jax.Array, variant: Optional[Variant] = None) -> jax.Array:
+    """Deprecated alias of :func:`repro.xfft.irfft2` (kept for old call sites)."""
+    warn_deprecated("repro.core.rfft.irfft2", "repro.xfft.irfft2")
+    from repro import xfft  # lazy: xfft builds on this module
+
+    if variant is None or variant == "auto":
+        return xfft.irfft2(y)
+    with xfft.config(variant=variant):
+        return xfft.irfft2(y)

@@ -15,15 +15,14 @@
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fft1d import Variant, fft, ifft
-from repro.core.fft2d import fft2, ifft2
-from repro.core.rfft import irfft, irfft2, rfft, rfft2
+from repro.core.fft1d import Variant, fft_impl, ifft_impl
+from repro.core.fft2d import fft2_impl, ifft2_impl
+from repro.core.rfft import irfft2_impl, irfft_impl, rfft2_impl, rfft_impl
 
 __all__ = ["fourier_mixing", "fftconv", "correlate2", "stft", "log_mel"]
 
@@ -32,7 +31,7 @@ def _is_real(x) -> bool:
     return not jnp.issubdtype(jnp.asarray(x).dtype, jnp.complexfloating)
 
 
-def fourier_mixing(x: jax.Array, variant: str = "looped") -> jax.Array:
+def fourier_mixing(x: jax.Array, variant: str = "auto") -> jax.Array:
     """FNet mixing sublayer: real part of the 2D FFT over (seq, hidden).
 
     x: (..., seq, d) real. Both dims must be powers of two (pad upstream).
@@ -42,19 +41,19 @@ def fourier_mixing(x: jax.Array, variant: str = "looped") -> jax.Array:
     """
     if variant == "rfft":
         return fourier_mixing_rfft(x)
-    return jnp.real(fft2(x.astype(jnp.complex64), variant=variant)).astype(x.dtype)
+    return jnp.real(fft2_impl(x.astype(jnp.complex64), variant=variant)).astype(x.dtype)
 
 
-def rfft_last_axis(x: jax.Array, variant: Variant = "stockham") -> jax.Array:
+def rfft_last_axis(x: jax.Array, variant: Variant = "auto") -> jax.Array:
     """Real-input FFT along the last axis via the packed half-length trick:
     one complex FFT of length D/2 + O(D) untangling, instead of length D.
     Returns the non-redundant half spectrum (..., D//2 + 1).
 
     Thin alias of :func:`repro.core.rfft.rfft` (kept for back-compat)."""
-    return rfft(x, axis=-1, variant=variant)
+    return rfft_impl(x, axis=-1, variant=variant)
 
 
-def fourier_mixing_rfft(x: jax.Array, variant: Variant = "stockham") -> jax.Array:
+def fourier_mixing_rfft(x: jax.Array, variant: Variant = "auto") -> jax.Array:
     """Re(FFT_seq(FFT_d(x))) for real x, computing only the non-redundant
     half of the d-spectrum and mirroring the real part back:
 
@@ -62,7 +61,7 @@ def fourier_mixing_rfft(x: jax.Array, variant: Variant = "stockham") -> jax.Arra
     """
     s, d = x.shape[-2], x.shape[-1]
     xh = rfft_last_axis(x, variant=variant)        # (..., S, D/2+1)
-    yh = fft(xh, axis=-2, variant=variant)         # seq-axis complex FFT
+    yh = fft_impl(xh, axis=-2, variant=variant)         # seq-axis complex FFT
     re = jnp.real(yh)
     s_mirror = (-jnp.arange(s)) % s
     tail_k = jnp.arange(d // 2 - 1, 0, -1)         # D−k for k = D/2+1 .. D−1
@@ -74,7 +73,7 @@ def _next_pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
-def fftconv(x: jax.Array, kernel: jax.Array, variant: Variant = "looped") -> jax.Array:
+def fftconv(x: jax.Array, kernel: jax.Array, variant: Variant = "auto") -> jax.Array:
     """Causal long convolution y[t] = sum_s k[s]·x[t−s] via the FFT engine.
 
     x: (..., seq, d); kernel: (seq_k, d) with seq_k <= seq. O(L log L) versus
@@ -89,16 +88,20 @@ def fftconv(x: jax.Array, kernel: jax.Array, variant: Variant = "looped") -> jax
     xp = jnp.pad(xt, [(0, 0)] * (xt.ndim - 1) + [(0, n - seq)])
     kp = jnp.pad(kt, [(0, 0)] * (kt.ndim - 1) + [(0, n - kt.shape[-1])])
     if _is_real(x) and _is_real(kernel):
-        y = irfft(rfft(xp, variant=variant) * rfft(kp, variant=variant),
-                  variant=variant)[..., :seq]
+        y = irfft_impl(
+            rfft_impl(xp, variant=variant) * rfft_impl(kp, variant=variant),
+            variant=variant,
+        )[..., :seq]
         return jnp.swapaxes(y, -1, -2).astype(x.dtype)
-    y = ifft(fft(xp, variant=variant) * fft(kp, variant=variant),
-             variant=variant)[..., :seq]
+    y = ifft_impl(
+        fft_impl(xp, variant=variant) * fft_impl(kp, variant=variant),
+        variant=variant,
+    )[..., :seq]
     return jnp.swapaxes(jnp.real(y), -1, -2).astype(x.dtype)
 
 
 def correlate2(scene: jax.Array, template: jax.Array,
-               variant: Variant = "stockham") -> jax.Array:
+               variant: Variant = "auto") -> jax.Array:
     """Matched-filter cross-correlation entirely in the Fourier domain:
 
         corr = IFFT2( FFT2(scene) · conj(FFT2(template)) )
@@ -110,12 +113,12 @@ def correlate2(scene: jax.Array, template: jax.Array,
     HBM traffic of the complex transform.
     """
     if _is_real(scene) and _is_real(template):
-        fs = rfft2(scene, variant=variant)
-        ft = rfft2(template, variant=variant)
-        return irfft2(fs * jnp.conj(ft), variant=variant)
-    fs = fft2(jnp.asarray(scene).astype(jnp.complex64), variant=variant)
-    ft = fft2(jnp.asarray(template).astype(jnp.complex64), variant=variant)
-    return jnp.real(ifft2(fs * jnp.conj(ft), variant=variant))
+        fs = rfft2_impl(scene, variant=variant)
+        ft = rfft2_impl(template, variant=variant)
+        return irfft2_impl(fs * jnp.conj(ft), variant=variant)
+    fs = fft2_impl(jnp.asarray(scene).astype(jnp.complex64), variant=variant)
+    ft = fft2_impl(jnp.asarray(template).astype(jnp.complex64), variant=variant)
+    return jnp.real(ifft2_impl(fs * jnp.conj(ft), variant=variant))
 
 
 @functools.lru_cache(maxsize=8)
@@ -127,14 +130,14 @@ def stft(
     audio: jax.Array,
     frame: int = 512,
     hop: int = 256,
-    variant: Variant = "looped",
+    variant: Variant = "auto",
 ) -> jax.Array:
     """Short-time Fourier transform: (..., T) -> (..., frames, frame//2+1)."""
     t = audio.shape[-1]
     n_frames = 1 + (t - frame) // hop
     idx = np.arange(frame)[None, :] + hop * np.arange(n_frames)[:, None]
     windows = audio[..., idx] * jnp.asarray(_hann(frame))
-    spec = fft(windows.astype(jnp.complex64), variant=variant)
+    spec = fft_impl(windows.astype(jnp.complex64), variant=variant)
     return spec[..., : frame // 2 + 1]
 
 
@@ -166,7 +169,7 @@ def log_mel(
     frame: int = 512,
     hop: int = 256,
     n_mels: int = 80,
-    variant: Variant = "looped",
+    variant: Variant = "auto",
 ) -> jax.Array:
     """Whisper-style log-mel spectrogram built on the paper's engine."""
     spec = stft(audio, frame=frame, hop=hop, variant=variant)

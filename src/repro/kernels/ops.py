@@ -18,7 +18,6 @@ VMEM budget (``fft2_fits_vmem``) instead of overflowing it.
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
@@ -113,9 +112,9 @@ def _fft_rows(re: jax.Array, im: jax.Array, *, radix: int, interpret: bool):
     never overflows, whatever the frame geometry."""
     if fft_fits_vmem(re.shape[-1]):
         return fft_fused(re, im, radix=radix, interpret=interpret)
-    from repro.core.fft1d import fft  # lazy: core imports kernels
+    from repro.core.fft1d import fft_impl  # lazy: core imports kernels
 
-    z = fft(re + 1j * im, variant=_jnp_variant(radix))
+    z = fft_impl(re + 1j * im, variant=_jnp_variant(radix))
     return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
 
 
@@ -172,18 +171,18 @@ def rfft2_kernel(x: jax.Array, *, radix: int = 2, interpret: bool | None = None)
         # The column batch (f·(W/2+1) rows) is odd, which would force the
         # fused kernel to a degenerate 1-row tile — the jnp engine handles
         # that pass instead.
-        from repro.core.fft1d import fft  # lazy: core imports kernels
+        from repro.core.fft1d import fft_impl  # lazy: core imports kernels
 
         half = w // 2 + 1
         if fft_fits_vmem(w):
             yr, yi = rfft_fused(xf.reshape(f * h, w), radix=radix, interpret=interpret)
             z = (yr + 1j * yi).reshape(f, h, half)
         else:
-            from repro.core.rfft import rfft  # rows too long for any tile
+            from repro.core.rfft import rfft_impl  # rows too long for any tile
 
-            z = rfft(xf.reshape(f * h, w), variant=_jnp_variant(radix))
+            z = rfft_impl(xf.reshape(f * h, w), variant=_jnp_variant(radix))
             z = z.reshape(f, h, half)
-        z = fft(z.swapaxes(-1, -2), variant=_jnp_variant(radix))
+        z = fft_impl(z.swapaxes(-1, -2), variant=_jnp_variant(radix))
         z = z.swapaxes(-1, -2)
         return z.reshape(*lead, h, half)
     return (yr + 1j * yi).reshape(*lead, h, w // 2 + 1)
@@ -201,18 +200,18 @@ def irfft2_kernel(y: jax.Array, *, radix: int = 2, interpret: bool | None = None
     else:
         # Column IFFT via the jnp engine (the odd f·(W/2+1) column batch
         # defeats the fused kernel's row tiling), then the fused row irfft.
-        from repro.core.fft1d import ifft  # lazy: core imports kernels
+        from repro.core.fft1d import ifft_impl  # lazy: core imports kernels
 
-        z = ifft((re + 1j * im).swapaxes(-1, -2), variant=_jnp_variant(radix))
+        z = ifft_impl((re + 1j * im).swapaxes(-1, -2), variant=_jnp_variant(radix))
         z = z.swapaxes(-1, -2)
         if fft_fits_vmem(w):
             fr = jnp.real(z).astype(jnp.float32).reshape(f * h, half)
             fi = jnp.imag(z).astype(jnp.float32).reshape(f * h, half)
             out = irfft_fused(fr, fi, radix=radix, interpret=interpret)
         else:
-            from repro.core.rfft import irfft  # rows too long for any tile
+            from repro.core.rfft import irfft_impl  # rows too long for any tile
 
-            out = irfft(z.reshape(f * h, half), variant=_jnp_variant(radix))
+            out = irfft_impl(z.reshape(f * h, half), variant=_jnp_variant(radix))
         out = out.reshape(f, h, w)
     return out.reshape(*lead, h, w)
 

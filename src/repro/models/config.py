@@ -68,7 +68,8 @@ class ModelConfig:
     # vlm: number of patch-embedding positions provided by the stub frontend
     n_patches: int = 256
     # spectral (fourier_lm): use the paper's engine as the mixing layer
-    fft_variant: str = "looped"
+    # ("auto" = the repro.plan-backed unified default; see repro.xfft)
+    fft_variant: str = "auto"
     moe: MoEConfig | None = None
     mla: MLAConfig | None = None
     ssm: SSMConfig | None = None

@@ -37,7 +37,6 @@ from repro.models.layers import (
     mlp_skel,
     rmsnorm,
     rmsnorm_skel,
-    softmax_xent,
     unembed,
     unembed_skel,
 )

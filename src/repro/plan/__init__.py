@@ -6,7 +6,7 @@ problem key, FFTW-style (ESTIMATE analytically, MEASURE by timing), and
 remembers the decision in a versioned JSON-backed cache.
 """
 
-from repro.plan.api import execute, plan_fft, resolve
+from repro.plan.api import execute, plan_fft, resolve, resolve_call
 from repro.plan.autotune import (
     chunk_candidates,
     estimate_plan,
@@ -17,6 +17,7 @@ from repro.plan.cache import PlanCache, default_cache, reset_default_cache
 from repro.plan.plan import (
     DIRECTIONS,
     KINDS,
+    NORMS,
     PLAN_SCHEMA_VERSION,
     PLAN_VARIANTS,
     FFTPlan,
@@ -30,6 +31,7 @@ __all__ = [
     "PlanCache",
     "DIRECTIONS",
     "KINDS",
+    "NORMS",
     "PLAN_SCHEMA_VERSION",
     "PLAN_VARIANTS",
     "chunk_candidates",
@@ -41,5 +43,6 @@ __all__ = [
     "problem_key",
     "reset_default_cache",
     "resolve",
+    "resolve_call",
     "variant_candidates",
 ]

@@ -1,23 +1,29 @@
-"""Planner entry points: ``plan_fft`` / ``execute`` / ``resolve``.
+"""Planner entry points: ``plan_fft`` / ``execute`` / ``resolve_call``.
 
 ``plan_fft`` is the explicit front door (pick a mode, get a plan, it is
-cached — and persisted when the cache is file-backed). ``resolve`` is
-the implicit one: every ``variant="auto"`` call site in ``repro.core``
-funnels through it, so a warm cache (e.g. MEASURE plans produced at
-service startup or by ``benchmarks/plan_autotune.py``) steers the hot
-path while a cold cache falls back to the analytic ESTIMATE model —
-never a timed sweep, because ``resolve`` may run inside a jit trace.
+cached — and persisted when the cache is file-backed). ``resolve_call``
+is the implicit one: every ``repro.xfft`` transform and every
+``variant="auto"`` call site in ``repro.core`` funnels through it, so a
+warm cache (e.g. MEASURE plans produced at service startup or by
+``benchmarks/plan_autotune.py``) steers the hot path while a cold cache
+falls back to the analytic ESTIMATE model. ``resolve_call`` is also
+where the scoped ``repro.xfft.config`` overrides land: a forced variant,
+a measure-on-miss mode, or a wisdom directory apply to every call inside
+the scope without any signature changing. ``resolve`` is the pre-xfft
+spelling of the same lookup, kept for callers that plan bare problems.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import os
 from typing import Dict, Optional, Tuple
 
 from repro.plan.autotune import estimate_plan, measure_plan
 from repro.plan.cache import PlanCache, default_cache
-from repro.plan.plan import FFTPlan, ProblemKey, problem_key
+from repro.plan.plan import FFTPlan, problem_key
 
-__all__ = ["plan_fft", "execute", "resolve"]
+__all__ = ["plan_fft", "execute", "resolve", "resolve_call"]
 
 
 def plan_fft(
@@ -31,6 +37,8 @@ def plan_fft(
     measure_iters: int = 5,
     timings_out: Optional[Dict[str, float]] = None,
     direction: str = "fwd",
+    norm: str = "backward",
+    axes: Optional[Tuple[int, ...]] = None,
 ) -> FFTPlan:
     """Plan one FFT problem; consult the cache first unless ``force``.
 
@@ -41,12 +49,14 @@ def plan_fft(
     every new plan so a second process re-tunes nothing.
 
     ``direction="inv"`` plans the inverse transform, which tunes under its
-    own cache key (forward wisdom never cross-contaminates it).
+    own cache key (forward wisdom never cross-contaminates it). ``norm``
+    and ``axes`` are part of the key too — the xfft front door plans whole
+    calls, scaling convention included.
     """
     if mode not in ("estimate", "measure"):
         raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
     cache = cache if cache is not None else default_cache()
-    key = problem_key(kind, shape, dtype, n_devices, direction)
+    key = problem_key(kind, shape, dtype, n_devices, direction, norm, axes)
     # Pencil problems can't be timed without a live mesh: the best we can do
     # is the analytic model, so a cached ESTIMATE plan already is the answer.
     effective_mode = "estimate" if kind == "fft2d_pencil" else mode
@@ -64,6 +74,128 @@ def plan_fft(
     return plan
 
 
+def _active_config():
+    """The scoped ``repro.xfft.config`` state (lazy import: xfft uses plan)."""
+    from repro.xfft._config import get_config
+
+    return get_config()
+
+
+#: PlanCache instances memoized per config ``cache_dir`` so repeated calls
+#: under the same scope accumulate hits in ONE cache (and one wisdom file).
+_DIR_CACHES: Dict[str, PlanCache] = {}
+
+
+def _cache_for_dir(cache_dir: str) -> PlanCache:
+    path = os.path.join(cache_dir, "xfft_plans.json")
+    cache = _DIR_CACHES.get(path)
+    if cache is None:
+        cache = _DIR_CACHES.setdefault(path, PlanCache(path=path))
+    return cache
+
+
+_WARNED_NO_TRACE_INTROSPECTION = False
+
+
+def _trace_safe() -> bool:
+    """True when no JAX trace is in flight (MEASURE may jit and time).
+
+    Unavailable introspection degrades to False — a measure-mode config
+    then falls back to ESTIMATE rather than risking a jit inside a trace
+    — and says so once, so autotuning never stops working silently after
+    a jax upgrade.
+    """
+    import warnings
+
+    with warnings.catch_warnings():
+        # newer jax deprecates the jax.core re-export; stay silent so
+        # callers running with -W error::DeprecationWarning never trip
+        warnings.simplefilter("ignore", DeprecationWarning)
+        try:
+            from jax.core import trace_state_clean
+        except Exception:  # pragma: no cover - public re-export removed
+            try:
+                from jax._src.core import trace_state_clean
+            except Exception:
+                global _WARNED_NO_TRACE_INTROSPECTION
+                if not _WARNED_NO_TRACE_INTROSPECTION:
+                    _WARNED_NO_TRACE_INTROSPECTION = True
+                    warnings.warn(
+                        "jax trace-state introspection unavailable on this "
+                        "jax version; mode='measure' resolution degrades to "
+                        "ESTIMATE (use plan_fft(mode='measure') to tune "
+                        "explicitly)",
+                        RuntimeWarning,
+                        stacklevel=3,
+                    )
+                return False
+        try:
+            return bool(trace_state_clean())
+        except Exception:  # pragma: no cover - conservative inside traces
+            return False
+
+
+def resolve_call(
+    kind: str,
+    shape: Tuple[int, ...],
+    dtype: str = "complex64",
+    n_devices: int = 1,
+    cache: Optional[PlanCache] = None,
+    direction: str = "fwd",
+    norm: str = "backward",
+    axes: Optional[Tuple[int, ...]] = None,
+    mode: Optional[str] = None,
+) -> FFTPlan:
+    """Resolve one transform *call* to a concrete plan, config applied.
+
+    The dispatch pipeline of every ``repro.xfft`` entry point (and of the
+    legacy ``variant="auto"`` call sites):
+
+    1. The active :func:`repro.xfft.config` scope supplies defaults: its
+       ``cache_dir`` selects the wisdom cache (else the process-wide
+       default cache), its ``mode`` decides what a cache miss costs.
+    2. Cache hit -> the cached (possibly MEASURE) plan. Miss -> ESTIMATE,
+       which is pure Python on analytic counts and therefore safe while
+       JAX is tracing the surrounding computation. ``mode="measure"``
+       upgrades misses (and cached ESTIMATE plans) to a timed sweep, but
+       only outside a trace — inside one it degrades to ESTIMATE rather
+       than jitting mid-trace.
+    3. A scoped ``variant=...`` override replaces the planned schedule
+       (the returned plan is marked ``mode="forced"`` and never cached:
+       forced choices are opinions, not wisdom).
+    """
+    cfg = _active_config()
+    if cache is None:
+        cache = _cache_for_dir(cfg.cache_dir) if cfg.cache_dir else default_cache()
+    key = problem_key(kind, shape, dtype, n_devices, direction, norm, axes)
+    mode = mode if mode is not None else cfg.mode
+    plan = cache.get(key)
+    # A forced variant discards the planner's pick, so never pay a timed
+    # sweep inside the scope — the pin exists to skip planning costs.
+    want_measure = (
+        mode == "measure"
+        and cfg.variant is None
+        and kind != "fft2d_pencil"
+        and (plan is None or plan.mode != "measure")
+    )
+    if want_measure and _trace_safe():
+        plan = cache.put(measure_plan(key))
+        if cache.path:
+            cache.save()
+    elif plan is None:
+        # ESTIMATE results stay in memory only: they are free to recompute,
+        # and a whole-file save here could clobber wisdom another process
+        # measured into the same file after we loaded it (it would also put
+        # file I/O inside jit traces). Only MEASURE results earn a write.
+        plan = cache.put(estimate_plan(key))
+    overrides = {}
+    if cfg.variant is not None and cfg.variant != plan.variant:
+        overrides.update(variant=cfg.variant, mode="forced", measured_us=None)
+    if cfg.precision != plan.precision:
+        overrides["precision"] = cfg.precision
+    return dataclasses.replace(plan, **overrides) if overrides else plan
+
+
 def resolve(
     kind: str,
     shape: Tuple[int, ...],
@@ -74,16 +206,10 @@ def resolve(
 ) -> FFTPlan:
     """Cheap plan lookup for ``variant="auto"`` call sites (trace-safe).
 
-    Cache hit -> the cached (possibly MEASURE) plan; miss -> ESTIMATE,
-    which is pure Python on analytic counts and therefore safe to run
-    while JAX is tracing the surrounding computation.
+    Pre-xfft spelling of :func:`resolve_call` under the default norm and
+    canonical axes; kept so bare-problem callers read naturally.
     """
-    cache = cache if cache is not None else default_cache()
-    key = problem_key(kind, shape, dtype, n_devices, direction)
-    hit = cache.get(key)
-    if hit is not None:
-        return hit
-    return cache.put(estimate_plan(key))
+    return resolve_call(kind, shape, dtype, n_devices, cache, direction)
 
 
 def execute(plan: FFTPlan, x, mesh=None, axis: str = "data"):
@@ -95,21 +221,21 @@ def execute(plan: FFTPlan, x, mesh=None, axis: str = "data"):
     kind = plan.key.kind
     inv = plan.key.direction == "inv"
     if kind == "fft1d":
-        from repro.core.fft1d import fft, ifft
+        from repro.core.fft1d import fft_impl, ifft_impl
 
-        return (ifft if inv else fft)(x, variant=plan.variant)
+        return (ifft_impl if inv else fft_impl)(x, variant=plan.variant)
     if kind == "fft2d":
-        from repro.core.fft2d import fft2, ifft2
+        from repro.core.fft2d import fft2_impl, ifft2_impl
 
-        return (ifft2 if inv else fft2)(x, variant=plan.variant)
+        return (ifft2_impl if inv else fft2_impl)(x, variant=plan.variant)
     if kind == "rfft1d":
-        from repro.core.rfft import irfft, rfft
+        from repro.core.rfft import irfft_impl, rfft_impl
 
-        return (irfft if inv else rfft)(x, variant=plan.variant)
+        return (irfft_impl if inv else rfft_impl)(x, variant=plan.variant)
     if kind == "rfft2d":
-        from repro.core.rfft import irfft2, rfft2
+        from repro.core.rfft import irfft2_impl, rfft2_impl
 
-        return (irfft2 if inv else rfft2)(x, variant=plan.variant)
+        return (irfft2_impl if inv else rfft2_impl)(x, variant=plan.variant)
     if kind == "fft2d_stream":
         from repro.core.fft2d import fft2_stream
 

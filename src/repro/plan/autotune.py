@@ -332,16 +332,16 @@ def _candidate_runners(key: ProblemKey) -> Dict[Tuple[str, int], Callable]:
 
     import jax
 
-    from repro.core.fft1d import fft, ifft
-    from repro.core.fft2d import fft2, fft2_stream, ifft2
-    from repro.core.rfft import irfft, irfft2, rfft, rfft2
+    from repro.core.fft1d import fft_impl, ifft_impl
+    from repro.core.fft2d import fft2_impl, fft2_stream, ifft2_impl
+    from repro.core.rfft import irfft2_impl, irfft_impl, rfft2_impl, rfft_impl
 
     inv = key.direction == "inv"
     entry = {
-        "fft1d": ifft if inv else fft,
-        "fft2d": ifft2 if inv else fft2,
-        "rfft1d": irfft if inv else rfft,
-        "rfft2d": irfft2 if inv else rfft2,
+        "fft1d": ifft_impl if inv else fft_impl,
+        "fft2d": ifft2_impl if inv else fft2_impl,
+        "rfft1d": irfft_impl if inv else rfft_impl,
+        "rfft2d": irfft2_impl if inv else rfft2_impl,
     }
     runners: Dict[Tuple[str, int], Callable] = {}
     for v in variant_candidates(key):

@@ -22,7 +22,10 @@ from typing import Optional, Tuple
 #: v2: radix-4 + fused kernel variants, real-input (rfft) problem kinds and
 #: the transform-direction key field — v1 wisdom tuned without these
 #: candidates is stale by construction, so bumping forces a re-tune.
-PLAN_SCHEMA_VERSION = 2
+#: v3: norm and axes join the key (the ``repro.xfft`` front door plans whole
+#: calls, scaling convention and transform axes included, through
+#: ``resolve_call``) — v2 wisdom carries neither field, so it is orphaned.
+PLAN_SCHEMA_VERSION = 3
 
 #: Problem kinds the planner understands (r* = real-input two-for-one).
 KINDS = ("fft1d", "fft2d", "fft2d_stream", "fft2d_pencil", "rfft1d", "rfft2d")
@@ -35,6 +38,22 @@ PLAN_VARIANTS = ("looped", "unrolled", "stockham", "radix4", "fused", "fused_r4"
 #: Transform directions a ProblemKey may carry. Inverse transforms tune
 #: separately: their conjugation wrapper and 1/N scaling shift the optimum.
 DIRECTIONS = ("fwd", "inv")
+
+#: Normalization conventions (scipy.fft names): where the 1/N lives.
+NORMS = ("backward", "ortho", "forward")
+
+#: Canonical transform axes per kind — the axes every entry point moves the
+#: transform onto before keying (1D kinds transform the last axis, 2D kinds
+#: the trailing two). A ProblemKey built without explicit axes gets these,
+#: so pre-xfft call sites and the xfft front door share cache entries.
+_CANONICAL_AXES = {
+    "fft1d": (-1,),
+    "rfft1d": (-1,),
+    "fft2d": (-2, -1),
+    "rfft2d": (-2, -1),
+    "fft2d_stream": (-2, -1),
+    "fft2d_pencil": (-2, -1),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +72,8 @@ class ProblemKey:
     dtype: str                 # canonical dtype name, e.g. "complex64"
     n_devices: int = 1
     direction: str = "fwd"     # "fwd" | "inv" — inverse transforms tune apart
+    norm: str = "backward"     # scaling convention the call was made under
+    axes: Tuple[int, ...] = () # transform axes; () -> canonical for the kind
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -61,14 +82,20 @@ class ProblemKey:
             raise ValueError(
                 f"unknown direction {self.direction!r}; want one of {DIRECTIONS}"
             )
+        if self.norm not in NORMS:
+            raise ValueError(f"unknown norm {self.norm!r}; want one of {NORMS}")
         object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+        axes = tuple(int(a) for a in self.axes) or _CANONICAL_AXES[self.kind]
+        object.__setattr__(self, "axes", axes)
 
     def cache_key(self) -> str:
         """Stable, versioned string key for the plan cache."""
         shape = "x".join(str(s) for s in self.shape)
+        axes = ",".join(str(a) for a in self.axes)
         return (
             f"v{PLAN_SCHEMA_VERSION}|{self.kind}|{self.direction}|{self.backend}"
             f"|{self.device_kind}|{shape}|{self.dtype}|d{self.n_devices}"
+            f"|{self.norm}|ax{axes}"
         )
 
     def to_dict(self) -> dict:
@@ -80,6 +107,8 @@ class ProblemKey:
             "dtype": self.dtype,
             "n_devices": self.n_devices,
             "direction": self.direction,
+            "norm": self.norm,
+            "axes": list(self.axes),
         }
 
     @classmethod
@@ -92,6 +121,8 @@ class ProblemKey:
             dtype=d["dtype"],
             n_devices=int(d["n_devices"]),
             direction=d.get("direction", "fwd"),
+            norm=d.get("norm", "backward"),
+            axes=tuple(d.get("axes", ())),
         )
 
 
@@ -163,8 +194,14 @@ def problem_key(
     dtype: str = "complex64",
     n_devices: int = 1,
     direction: str = "fwd",
+    norm: str = "backward",
+    axes: Optional[Tuple[int, ...]] = None,
 ) -> ProblemKey:
-    """Build a :class:`ProblemKey` for the *current* JAX backend/device."""
+    """Build a :class:`ProblemKey` for the *current* JAX backend/device.
+
+    ``axes=None`` keys on the kind's canonical axes (transform axes moved
+    last), which is what every entry point does before dispatching.
+    """
     import jax
 
     devices = jax.devices()
@@ -176,4 +213,6 @@ def problem_key(
         dtype=str(dtype),
         n_devices=int(n_devices),
         direction=direction,
+        norm=norm,
+        axes=tuple(axes) if axes else (),
     )

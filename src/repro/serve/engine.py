@@ -119,21 +119,31 @@ class SpectrumService:
     file-backed cache a service tunes once per shape for its lifetime.
     """
 
-    def __init__(self, plan_mode: str = "estimate", cache=None):
-        if plan_mode not in ("estimate", "measure"):
+    def __init__(self, plan_mode: str | None = None, cache=None):
+        # None defers to the scoped repro.xfft.config mode, so an operator's
+        # `xfft.config(mode="measure")` tunes the service exactly as it
+        # tunes direct calls; an explicit plan_mode pins the policy.
+        if plan_mode is not None and plan_mode not in ("estimate", "measure"):
             raise ValueError(f"plan_mode must be 'estimate' or 'measure', got {plan_mode!r}")
         self.plan_mode = plan_mode
         self.cache = cache
-        self.plans: dict = {}               # cache_key -> FFTPlan (session memo)
+        self.plans: dict = {}               # (config, cache_key) -> FFTPlan memo
 
     def _plan_for(self, kind: str, shape, dtype: str):
-        from repro.plan import plan_fft, problem_key
+        from repro.plan import problem_key, resolve_call
+        from repro.xfft import get_config
 
-        memo_key = problem_key(kind, shape, dtype).cache_key()
+        # resolve_call (not plan_fft): the service honours scoped
+        # repro.xfft.config overrides — a forced variant, mode or wisdom
+        # directory applies to serving exactly as to direct calls (unless
+        # the constructor pinned plan_mode). The session memo keys on the
+        # active config too, so a scoped override neither reads nor
+        # leaves stale memo entries.
+        memo_key = (get_config(), problem_key(kind, shape, dtype).cache_key())
         plan = self.plans.get(memo_key)
         if plan is None:
-            plan = plan_fft(kind, shape, dtype=dtype, mode=self.plan_mode,
-                            cache=self.cache)
+            plan = resolve_call(kind, shape, dtype=dtype, mode=self.plan_mode,
+                                cache=self.cache)
             self.plans[memo_key] = plan
         return plan
 

@@ -1,0 +1,72 @@
+"""repro.xfft — the unified, scipy.fft-style front door to the engine.
+
+One namespace, eight transforms (`fft`/`ifft`, `fft2`/`ifft2`, `rfft`/
+`irfft`, `rfft2`/`irfft2`), N-D helpers (`fftn`/`ifftn`), shift utilities
+(`fftshift`/`ifftshift`, plus the 2D conveniences `fftshift2`/
+`ifftshift2`), `norm="backward"|"ortho"|"forward"` conventions and
+arbitrary `axes=` — all dispatched through ``repro.plan``.
+
+**The unified default.** Before this namespace existed, every entry point
+carried its own ``variant=`` kwarg with *inconsistent* defaults: ``fft``/
+``fft2`` defaulted to ``"looped"`` (the paper-faithful schedule — also the
+slowest one XLA can emit, kept as a baseline), while ``rfft*`` defaulted
+to ``"stockham"`` (the variant that happened to be fastest when PR 2
+landed). Both were accidents of history, and both pushed a scheduling
+decision onto every caller. The one default now is: **no per-call variant
+at all — dispatch resolves through the planner** (``repro.plan``: a cached
+MEASURE plan when wisdom exists, the analytic ESTIMATE model otherwise).
+That is the right default because the best schedule is a property of the
+*problem* (backend, shape, dtype, direction), not of the call site; it is
+also the prerequisite shape for multi-backend dispatch — later PRs change
+what the planner may pick without changing any signature here.
+
+Engine selection is scoped, not threaded::
+
+    import repro.xfft as xfft
+
+    y = xfft.rfft2(frames)                  # plan-backed, no kwargs
+    with xfft.config(variant="fused_r4"):   # force the Pallas kernel...
+        y = xfft.rfft2(frames)              # ...only inside this scope
+    xfft.config(mode="measure")             # tune-on-miss, process-wide
+
+The old ``repro.core`` entry points (``repro.core.fft`` etc.) remain as
+deprecation shims that warn once and delegate here.
+"""
+
+from repro.xfft._config import XFFTConfig, config, get_config
+from repro.xfft._transforms import (
+    fft,
+    fft2,
+    fftn,
+    fftshift,
+    fftshift2,
+    ifft,
+    ifft2,
+    ifftn,
+    ifftshift,
+    ifftshift2,
+    irfft,
+    irfft2,
+    rfft,
+    rfft2,
+)
+
+__all__ = [
+    "fft",
+    "ifft",
+    "fft2",
+    "ifft2",
+    "fftn",
+    "ifftn",
+    "rfft",
+    "irfft",
+    "rfft2",
+    "irfft2",
+    "fftshift",
+    "ifftshift",
+    "fftshift2",
+    "ifftshift2",
+    "config",
+    "get_config",
+    "XFFTConfig",
+]

@@ -1,0 +1,132 @@
+"""Context-scoped configuration for the ``repro.xfft`` namespace.
+
+One knob set, one scope rule: :func:`config` merges its keyword arguments
+into the active configuration immediately (global-setter usage) and, when
+used as a context manager, restores the previous configuration on exit
+(scoped usage). Tests, benchmarks and the serve engine select engines by
+*scope* instead of threading ``variant=`` kwargs through five layers:
+
+    import repro.xfft as xfft
+
+    xfft.config(mode="measure")                 # process-wide from here on
+    with xfft.config(variant="fused_r4"):       # only inside this block
+        y = xfft.rfft2(x)
+
+Scoping is :mod:`contextvars`-based, so overrides nest, compose across
+``async`` task boundaries, and never leak between threads.
+"""
+
+from __future__ import annotations
+
+import contextvars
+import dataclasses
+from typing import Optional
+
+from repro.plan.plan import PLAN_VARIANTS
+
+__all__ = ["XFFTConfig", "config", "get_config"]
+
+#: Accepted spellings of the single-precision policy (the paper engine is
+#: complex64 end to end; higher precisions are roadmap items).
+_PRECISIONS = {"complex64": "complex64", "single": "complex64"}
+
+
+@dataclasses.dataclass(frozen=True)
+class XFFTConfig:
+    """One immutable configuration snapshot.
+
+    variant   — force a concrete engine schedule for every call in scope;
+                ``None`` (the default) lets ``repro.plan`` decide. This is
+                THE unified default: see the ``repro.xfft`` module
+                docstring for why the old per-entry-point defaults died.
+    mode      — what a plan-cache miss costs: ``"estimate"`` (analytic,
+                instant, trace-safe) or ``"measure"`` (timed sweep when
+                resolution happens outside a jit trace).
+    precision — accumulation dtype policy; only single precision
+                (``"complex64"``) exists today, matching the paper's c64
+                butterfly datapath.
+    cache_dir — directory holding the plan-wisdom file for calls in scope
+                (``<cache_dir>/xfft_plans.json``); ``None`` uses the
+                process-wide default cache (``$REPRO_PLAN_CACHE``). Pass
+                ``""`` to :func:`config` to clear an inherited directory
+                (``None`` means "inherit", like every other field).
+    """
+
+    variant: Optional[str] = None
+    mode: str = "estimate"
+    precision: str = "complex64"
+    cache_dir: Optional[str] = None
+
+
+_ACTIVE: contextvars.ContextVar[XFFTConfig] = contextvars.ContextVar(
+    "repro_xfft_config", default=XFFTConfig()
+)
+
+
+def get_config() -> XFFTConfig:
+    """The configuration currently in scope."""
+    return _ACTIVE.get()
+
+
+class config:
+    """Set xfft configuration, globally or for a ``with`` scope.
+
+    Calling applies the overrides immediately; entering the returned object
+    as a context manager makes them scoped (previous configuration restored
+    on exit). Unspecified fields inherit from the configuration active at
+    call time, so scopes nest naturally.
+    """
+
+    def __init__(
+        self,
+        variant: Optional[str] = None,
+        mode: Optional[str] = None,
+        precision: Optional[str] = None,
+        cache_dir: Optional[str] = None,
+    ):
+        prev = _ACTIVE.get()
+        clear_variant = variant == "auto"  # "auto" clears an outer override
+        if clear_variant:
+            variant = None
+        elif variant is not None and variant not in PLAN_VARIANTS:
+            raise ValueError(
+                f"unknown variant {variant!r}; want one of {PLAN_VARIANTS}, "
+                "'auto' to clear an outer override, or None to inherit"
+            )
+        if mode is not None and mode not in ("estimate", "measure"):
+            raise ValueError(
+                f"mode must be 'estimate' or 'measure', got {mode!r}"
+            )
+        if precision is not None:
+            if precision not in _PRECISIONS:
+                raise ValueError(
+                    f"unsupported precision {precision!r}; the engine is "
+                    f"single-precision (want one of {sorted(_PRECISIONS)})"
+                )
+            precision = _PRECISIONS[precision]
+        merged = XFFTConfig(
+            variant=None if clear_variant else (
+                variant if variant is not None else prev.variant
+            ),
+            mode=mode if mode is not None else prev.mode,
+            precision=precision if precision is not None else prev.precision,
+            # "" clears an inherited directory (mirrors variant="auto"):
+            # None always means "inherit" for every field.
+            cache_dir=(
+                None if cache_dir == "" else
+                cache_dir if cache_dir is not None else prev.cache_dir
+            ),
+        )
+        self._token = _ACTIVE.set(merged)
+
+    def __enter__(self) -> "config":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.restore()
+
+    def restore(self) -> None:
+        """Undo this call's overrides (automatic when used as a context)."""
+        if self._token is not None:
+            _ACTIVE.reset(self._token)
+            self._token = None

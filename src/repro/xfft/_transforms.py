@@ -1,0 +1,333 @@
+"""The eight xfft transforms + N-D helpers, all plan-backed.
+
+Every function here follows the same dispatch pipeline:
+
+1. validate axes/norm and (scipy-style) resize to ``n``/``s`` if given —
+   errors name the offending axis and size;
+2. move the transform axes last (the engines' canonical layout);
+3. resolve the whole call through :func:`repro.plan.api.resolve_call`
+   (plan cache -> scoped config overrides -> concrete variant);
+4. run the ``repro.core`` engine implementation under that variant;
+5. apply the ``norm`` scaling on top of the engines' native convention
+   (forward unscaled, inverse 1/N — i.e. ``"backward"``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fft1d import _check_pow2 as _core_check_pow2
+from repro.core.fft1d import canonical_axis
+from repro.core.fft1d import fft_impl as _fft_impl
+from repro.core.fft1d import ifft_impl as _ifft_impl
+from repro.core.fft2d import fft2_impl as _fft2_impl
+from repro.core.fft2d import fftshift2, ifftshift2
+from repro.core.fft2d import ifft2_impl as _ifft2_impl
+from repro.core.rfft import _check_real  # one real-input contract
+from repro.core.rfft import irfft2_impl as _irfft2_impl
+from repro.core.rfft import irfft_impl as _irfft_impl
+from repro.core.rfft import rfft2_impl as _rfft2_impl
+from repro.core.rfft import rfft_impl as _rfft_impl
+from repro.plan.api import resolve_call
+from repro.plan.plan import NORMS
+
+__all__ = [
+    "fft", "ifft", "fft2", "ifft2", "fftn", "ifftn",
+    "rfft", "irfft", "rfft2", "irfft2",
+    "fftshift", "ifftshift", "fftshift2", "ifftshift2",
+]
+
+
+def _check_norm(norm: Optional[str]) -> str:
+    if norm is None:
+        return "backward"
+    if norm not in NORMS:
+        raise ValueError(
+            f'norm must be one of {NORMS} (or None for "backward"), got {norm!r}'
+        )
+    return norm
+
+
+# one bounds check for the whole stack (same helper the engines use)
+_canon_axis = canonical_axis
+
+
+def _canon_axes(
+    axes: Sequence[int], ndim: int, name: str
+) -> Tuple[int, ...]:
+    canon = tuple(_canon_axis(a, ndim, name) for a in axes)
+    if len(set(canon)) != len(canon):
+        raise ValueError(f"{name}: axes {tuple(axes)} name an axis twice")
+    return canon
+
+
+def _check_pow2(n: int, axis: int, name: str) -> None:
+    """The satellite error contract: name the offending axis AND size
+    (one shared message — ``repro.core.fft1d._check_pow2`` — so the
+    wording can't drift between the front door and the engines)."""
+    del name  # entry point named by the traceback; the contract names axis+size
+    _core_check_pow2(n, axis=axis)
+
+
+def _resize_axis(x: jax.Array, n: int, axis: int) -> jax.Array:
+    """scipy-style ``n``/``s`` handling: crop or zero-pad along ``axis``."""
+    cur = x.shape[axis]
+    if n == cur:
+        return x
+    if n < cur:
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(0, n)
+        return x[tuple(idx)]
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, n - cur)
+    return jnp.pad(x, pad)
+
+
+def _scale(y: jax.Array, norm: str, n: int, forward: bool) -> jax.Array:
+    """Norm correction on top of the engines' backward convention."""
+    if norm == "backward":
+        return y
+    if norm == "ortho":
+        factor = 1.0 / math.sqrt(n) if forward else math.sqrt(n)
+    else:  # "forward"
+        factor = 1.0 / n if forward else float(n)
+    return y * jnp.asarray(factor, dtype=jnp.float32)
+
+
+def _moved_shape(shape: Tuple[int, ...], axis: int) -> Tuple[int, ...]:
+    """The plan-key shape: ``axis`` moved last (the engines' layout)."""
+    return shape[:axis] + shape[axis + 1:] + (shape[axis],)
+
+
+# ------------------------------ 1D complex ------------------------------
+
+
+def fft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
+    """1D FFT along ``axis``; scipy.fft-compatible, plan-backed dispatch."""
+    norm = _check_norm(norm)
+    x = jnp.asarray(x)
+    ax = _canon_axis(axis, x.ndim, "fft")
+    if n is not None:
+        x = _resize_axis(x, int(n), ax)
+    length = x.shape[ax]
+    _check_pow2(length, ax, "fft")
+    plan = resolve_call("fft1d", _moved_shape(x.shape, ax), norm=norm)
+    y = _fft_impl(x, axis=ax, variant=plan.variant)
+    return _scale(y, norm, length, forward=True)
+
+
+def ifft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
+    """Inverse 1D FFT along ``axis`` (norm-aware, plan-backed)."""
+    norm = _check_norm(norm)
+    x = jnp.asarray(x)
+    ax = _canon_axis(axis, x.ndim, "ifft")
+    if n is not None:
+        x = _resize_axis(x, int(n), ax)
+    length = x.shape[ax]
+    _check_pow2(length, ax, "ifft")
+    plan = resolve_call(
+        "fft1d", _moved_shape(x.shape, ax), direction="inv", norm=norm
+    )
+    y = _ifft_impl(x, axis=ax, variant=plan.variant)
+    return _scale(y, norm, length, forward=False)
+
+
+# ------------------------------ 2D complex ------------------------------
+
+
+def _prep_2d(x, s, axes, norm, name):
+    """Shared 2D plumbing: validate, resize, move axes to (-2, -1)."""
+    norm = _check_norm(norm)
+    x = jnp.asarray(x)
+    if x.ndim < 2:
+        raise ValueError(f"{name} needs at least a 2D array, got shape {x.shape}")
+    if len(axes) != 2:
+        raise ValueError(f"{name} transforms exactly 2 axes, got {tuple(axes)}")
+    canon = _canon_axes(axes, x.ndim, name)
+    if s is not None:
+        if len(s) != 2:
+            raise ValueError(f"{name}: s must have 2 entries, got {tuple(s)}")
+        for target, ax in zip(s, canon):
+            x = _resize_axis(x, int(target), ax)
+    for ax in canon:
+        _check_pow2(x.shape[ax], ax, name)
+    moved = canon != (x.ndim - 2, x.ndim - 1)
+    if moved:
+        x = jnp.moveaxis(x, canon, (-2, -1))
+    return x, norm, canon, moved
+
+
+def _unmove_2d(y, canon, moved):
+    return jnp.moveaxis(y, (-2, -1), canon) if moved else y
+
+
+def fft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
+    """2D FFT over ``axes``; scipy.fft-compatible, plan-backed dispatch."""
+    x, norm, canon, moved = _prep_2d(x, s, axes, norm, "fft2")
+    h, w = x.shape[-2], x.shape[-1]
+    plan = resolve_call("fft2d", x.shape, norm=norm)
+    y = _fft2_impl(x, variant=plan.variant)
+    return _unmove_2d(_scale(y, norm, h * w, forward=True), canon, moved)
+
+
+def ifft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
+    """Inverse 2D FFT over ``axes`` (norm-aware, plan-backed)."""
+    x, norm, canon, moved = _prep_2d(x, s, axes, norm, "ifft2")
+    h, w = x.shape[-2], x.shape[-1]
+    plan = resolve_call("fft2d", x.shape, direction="inv", norm=norm)
+    y = _ifft2_impl(x, variant=plan.variant)
+    return _unmove_2d(_scale(y, norm, h * w, forward=False), canon, moved)
+
+
+# ------------------------------ N-D complex ------------------------------
+
+
+def _fftn_axes(x, s, axes, name):
+    if axes is None:
+        axes = tuple(range(x.ndim)) if s is None else \
+            tuple(range(x.ndim - len(s), x.ndim))
+    axes = tuple(int(a) for a in axes)
+    if s is not None and len(s) != len(axes):
+        raise ValueError(
+            f"{name}: s has {len(s)} entries for {len(axes)} axes"
+        )
+    return axes
+
+
+def fftn(x, s=None, axes=None, norm: Optional[str] = None):
+    """N-D FFT: separable 1D passes (a plan per axis); 2-axis calls take
+    the dedicated ``fft2d`` planning kind via :func:`fft2`."""
+    x = jnp.asarray(x)
+    axes = _fftn_axes(x, s, axes, "fftn")
+    if len(axes) == 2:
+        return fft2(x, s=s, axes=axes, norm=norm)
+    norm = _check_norm(norm)
+    _canon_axes(axes, x.ndim, "fftn")  # distinctness + bounds up front
+    total = 1
+    for i, ax in enumerate(axes):
+        if s is not None:
+            x = _resize_axis(x, int(s[i]), _canon_axis(ax, x.ndim, "fftn"))
+        total *= x.shape[_canon_axis(ax, x.ndim, "fftn")]
+        x = fft(x, axis=ax)
+    return _scale(x, norm, total, forward=True)
+
+
+def ifftn(x, s=None, axes=None, norm: Optional[str] = None):
+    """Inverse N-D FFT (see :func:`fftn`)."""
+    x = jnp.asarray(x)
+    axes = _fftn_axes(x, s, axes, "ifftn")
+    if len(axes) == 2:
+        return ifft2(x, s=s, axes=axes, norm=norm)
+    norm = _check_norm(norm)
+    _canon_axes(axes, x.ndim, "ifftn")
+    total = 1
+    for i, ax in enumerate(axes):
+        if s is not None:
+            x = _resize_axis(x, int(s[i]), _canon_axis(ax, x.ndim, "ifftn"))
+        total *= x.shape[_canon_axis(ax, x.ndim, "ifftn")]
+        x = ifft(x, axis=ax)
+    return _scale(x, norm, total, forward=False)
+
+
+# ------------------------------- real input -------------------------------
+
+
+
+
+def rfft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
+    """Real-input FFT -> non-redundant half spectrum (..., N/2+1)."""
+    norm = _check_norm(norm)
+    x = _check_real(x, "rfft")
+    ax = _canon_axis(axis, x.ndim, "rfft")
+    if n is not None:
+        x = _resize_axis(x, int(n), ax)
+    length = x.shape[ax]
+    _check_pow2(length, ax, "rfft")
+    plan = resolve_call(
+        "rfft1d", _moved_shape(x.shape, ax), dtype="float32", norm=norm
+    )
+    y = _rfft_impl(x, axis=ax, variant=plan.variant)
+    return _scale(y, norm, length, forward=True)
+
+
+def irfft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
+    """Inverse of :func:`rfft`: half spectrum -> real signal of length ``n``
+    (default ``2*(width-1)``)."""
+    norm = _check_norm(norm)
+    x = jnp.asarray(x).astype(jnp.complex64)
+    ax = _canon_axis(axis, x.ndim, "irfft")
+    length = int(n) if n is not None else 2 * (x.shape[ax] - 1)
+    _check_pow2(length, ax, "irfft")
+    # numpy semantics: the spectrum is cropped/zero-padded to n//2+1 bins.
+    x = _resize_axis(x, length // 2 + 1, ax)
+    key_shape = _moved_shape(x.shape, ax)[:-1] + (length,)
+    plan = resolve_call(
+        "rfft1d", key_shape, dtype="float32", direction="inv", norm=norm
+    )
+    y = _irfft_impl(x, axis=ax, variant=plan.variant)
+    return _scale(y, norm, length, forward=False)
+
+
+def rfft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
+    """2D real-input FFT -> (..., H, W/2+1) half spectrum, plan-backed."""
+    x = _check_real(x, "rfft2")
+    x, norm, canon, moved = _prep_2d(x, s, axes, norm, "rfft2")
+    h, w = x.shape[-2], x.shape[-1]
+    plan = resolve_call("rfft2d", x.shape, dtype="float32", norm=norm)
+    y = _rfft2_impl(x, variant=plan.variant)
+    return _unmove_2d(_scale(y, norm, h * w, forward=True), canon, moved)
+
+
+def irfft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
+    """Inverse of :func:`rfft2`: (..., H, W/2+1) -> real (..., H, W)."""
+    norm = _check_norm(norm)
+    x = jnp.asarray(x).astype(jnp.complex64)
+    if x.ndim < 2:
+        raise ValueError(f"irfft2 needs at least a 2D array, got shape {x.shape}")
+    if len(axes) != 2:
+        raise ValueError(f"irfft2 transforms exactly 2 axes, got {tuple(axes)}")
+    if s is not None and len(s) != 2:
+        raise ValueError(f"irfft2: s must have 2 entries, got {tuple(s)}")
+    canon = _canon_axes(axes, x.ndim, "irfft2")
+    moved = canon != (x.ndim - 2, x.ndim - 1)
+    if moved:
+        x = jnp.moveaxis(x, canon, (-2, -1))
+    h = int(s[0]) if s is not None else x.shape[-2]
+    w = int(s[1]) if s is not None else 2 * (x.shape[-1] - 1)
+    _check_pow2(h, canon[0], "irfft2")
+    _check_pow2(w, canon[1], "irfft2")
+    x = _resize_axis(_resize_axis(x, h, -2), w // 2 + 1, -1)
+    plan = resolve_call(
+        "rfft2d", x.shape[:-1] + (w,), dtype="float32", direction="inv", norm=norm
+    )
+    y = _irfft2_impl(x, variant=plan.variant)
+    return _unmove_2d(_scale(y, norm, h * w, forward=False), canon, moved)
+
+
+# ------------------------------- shifts -------------------------------
+
+
+def fftshift(x, axes=None):
+    """Move the zero-frequency bin to the centre (numpy-compatible)."""
+    x = jnp.asarray(x)
+    if axes is None:
+        axes = tuple(range(x.ndim))
+    elif isinstance(axes, int):
+        axes = (axes,)
+    axes = _canon_axes(axes, x.ndim, "fftshift")
+    return jnp.roll(x, [x.shape[a] // 2 for a in axes], axes)
+
+
+def ifftshift(x, axes=None):
+    """Exact inverse of :func:`fftshift` (correct for odd lengths too)."""
+    x = jnp.asarray(x)
+    if axes is None:
+        axes = tuple(range(x.ndim))
+    elif isinstance(axes, int):
+        axes = (axes,)
+    axes = _canon_axes(axes, x.ndim, "ifftshift")
+    return jnp.roll(x, [-(x.shape[a] // 2) for a in axes], axes)

@@ -51,6 +51,24 @@ def test_one_plan_per_group_is_memoized(rng):
     assert len(svc.plans) == 1
 
 
+def test_scoped_config_override_reaches_serving(rng):
+    """A forced-variant scope applies to serving and neither reads nor
+    leaves stale session-memo entries."""
+    import repro.xfft as xfft
+
+    svc = SpectrumService()
+    frame = rng.standard_normal((8, 8)).astype(np.float32)
+    svc.serve([SpectrumRequest(frame=frame)])
+    (default_plan,) = svc.plans.values()
+    with xfft.config(variant="looped"):
+        svc.serve([SpectrumRequest(frame=frame)])
+    assert len(svc.plans) == 2  # scoped call got its own memo entry
+    forced = [p for p in svc.plans.values() if p is not default_plan]
+    assert forced[0].variant == "looped"
+    svc.serve([SpectrumRequest(frame=frame)])
+    assert len(svc.plans) == 2  # back out of scope: default memo reused
+
+
 def test_rejects_bad_inputs(rng):
     svc = SpectrumService()
     with pytest.raises(ValueError):

@@ -1,0 +1,158 @@
+"""Context-scoped xfft configuration: scoping, plan-backed dispatch, and
+composition with tuned plan wisdom.
+
+Also DeprecationWarning-free by construction (CI enforces it): only the
+repro.xfft surface and the planner are exercised.
+"""
+
+import numpy as np
+import pytest
+
+import repro.xfft as xfft
+from repro.plan import (
+    PlanCache,
+    default_cache,
+    plan_fft,
+    problem_key,
+    reset_default_cache,
+)
+from repro.plan.api import resolve_call
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default_cache():
+    reset_default_cache()
+    yield
+    reset_default_cache()
+
+
+def test_config_scope_restores_on_exit():
+    base = xfft.get_config()
+    assert base.variant is None and base.mode == "estimate"
+    with xfft.config(variant="radix4", mode="measure"):
+        inner = xfft.get_config()
+        assert inner.variant == "radix4" and inner.mode == "measure"
+        with xfft.config(variant="stockham"):
+            assert xfft.get_config().variant == "stockham"
+            assert xfft.get_config().mode == "measure"  # inherited
+        assert xfft.get_config().variant == "radix4"
+    assert xfft.get_config() == base
+
+
+def test_config_global_setter_and_restore():
+    handle = xfft.config(variant="unrolled")
+    try:
+        assert xfft.get_config().variant == "unrolled"
+    finally:
+        handle.restore()
+    assert xfft.get_config().variant is None
+    handle.restore()  # second restore is a no-op, not an error
+
+
+def test_config_auto_clears_outer_override():
+    with xfft.config(variant="looped"):
+        with xfft.config(variant="auto"):
+            assert xfft.get_config().variant is None
+        assert xfft.get_config().variant == "looped"
+
+
+def test_config_rejects_bad_values():
+    with pytest.raises(ValueError, match="unknown variant"):
+        xfft.config(variant="fastest")
+    with pytest.raises(ValueError, match="mode must be"):
+        xfft.config(mode="exhaustive")
+    with pytest.raises(ValueError, match="precision"):
+        xfft.config(precision="bfloat16")
+
+
+def test_rfft2_with_no_kwargs_resolves_through_plan(rng):
+    """The ISSUE 3 acceptance gate: a bare xfft call consults AND
+    populates the plan cache."""
+    cache = default_cache()
+    assert len(cache) == 0
+    x = rng.standard_normal((32, 32)).astype(np.float32)
+    got = np.asarray(xfft.rfft2(x))
+    np.testing.assert_allclose(got, np.fft.rfft2(x), atol=1e-3)
+    key = problem_key("rfft2d", (32, 32), dtype="float32")
+    plan = cache.get(key)
+    assert plan is not None and plan.variant is not None
+    assert cache.misses >= 1  # the resolve consulted the cache first
+    before_hits = cache.hits
+    np.asarray(xfft.rfft2(x))  # second call: pure cache hit
+    assert cache.hits > before_hits and len(cache) == 1
+
+
+def test_variant_override_dispatches_only_inside_scope(rng, monkeypatch):
+    """config(variant="fused_r4") must reroute dispatch to the Pallas
+    kernel inside the scope and nowhere else."""
+    import repro.kernels.ops as ops
+
+    calls = []
+    real_kernel = ops.rfft2_kernel
+
+    def spy(x, **kw):
+        calls.append(np.asarray(x).shape)
+        return real_kernel(x, **kw)
+
+    monkeypatch.setattr(ops, "rfft2_kernel", spy)
+    x = rng.standard_normal((16, 16)).astype(np.float32)
+    ref = np.fft.rfft2(x)
+
+    np.testing.assert_allclose(np.asarray(xfft.rfft2(x)), ref, atol=1e-3)
+    assert calls == []  # ESTIMATE on CPU never picks the interpret kernel
+    with xfft.config(variant="fused_r4"):
+        np.testing.assert_allclose(np.asarray(xfft.rfft2(x)), ref, atol=1e-3)
+    assert len(calls) == 1  # forced exactly once, inside the scope
+    np.asarray(xfft.rfft2(x))
+    assert len(calls) == 1  # override did not leak past the scope
+
+
+def test_forced_variant_does_not_pollute_wisdom(rng):
+    x = rng.standard_normal((16, 16)).astype(np.float32)
+    np.asarray(xfft.rfft2(x))  # plans + caches the default schedule
+    key = problem_key("rfft2d", (16, 16), dtype="float32")
+    planned = default_cache().get(key).variant
+    with xfft.config(variant="looped"):
+        np.asarray(xfft.rfft2(x))
+    assert default_cache().get(key).variant == planned  # wisdom untouched
+
+
+def test_config_composes_with_measure_wisdom(rng):
+    """Tuned wisdom steers default dispatch; a scoped override wins inside
+    its scope; the wisdom is back in charge after exit."""
+    cache = PlanCache()
+    tuned = plan_fft("fft2d", (16, 16), mode="measure", cache=cache,
+                     measure_iters=1)
+    hit = resolve_call("fft2d", (16, 16), cache=cache)
+    assert hit is cache.get(tuned.key) and hit.mode == "measure"
+    other = next(v for v in ("stockham", "radix4") if v != tuned.variant)
+    with xfft.config(variant=other):
+        forced = resolve_call("fft2d", (16, 16), cache=cache)
+        assert forced.variant == other and forced.mode == "forced"
+    again = resolve_call("fft2d", (16, 16), cache=cache)
+    assert again is cache.get(tuned.key)  # wisdom restored, not re-tuned
+
+
+def test_cache_dir_scopes_wisdom_location(rng, tmp_path):
+    from repro.plan.api import _cache_for_dir
+
+    x = rng.standard_normal((8, 8)).astype(np.float32)
+    with xfft.config(cache_dir=str(tmp_path)):
+        np.asarray(xfft.rfft2(x))
+    key = problem_key("rfft2d", (8, 8), dtype="float32")
+    # the scoped call went to the directory cache, not the default one
+    assert _cache_for_dir(str(tmp_path)).get(key) is not None
+    assert default_cache().get(key) is None
+    # ESTIMATE plans stay in memory; only MEASURE results earn a file write
+    # (see test_measure_mode_upgrades_cache_misses)
+    assert not (tmp_path / "xfft_plans.json").exists()
+
+
+def test_measure_mode_upgrades_cache_misses(rng, tmp_path):
+    x = rng.standard_normal((8, 8)).astype(np.float32)
+    with xfft.config(mode="measure", cache_dir=str(tmp_path)):
+        np.asarray(xfft.rfft2(x))
+    fresh = PlanCache(path=str(tmp_path / "xfft_plans.json"))
+    plan = fresh.get(problem_key("rfft2d", (8, 8), dtype="float32"))
+    assert plan is not None and plan.mode == "measure"
+    assert plan.measured_us is not None
