@@ -10,9 +10,9 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import accuracy, fft_bench, pencil_overlap, plan_autotune
-from benchmarks import table1_resources, table2_resources, table5_utilization
-from benchmarks import table6_delay, throughput
+from benchmarks import accuracy, fft_bench, imaging_bench, pencil_overlap
+from benchmarks import plan_autotune, table1_resources, table2_resources
+from benchmarks import table5_utilization, table6_delay, throughput
 
 ALL = {
     "table1": table1_resources.run,
@@ -24,6 +24,7 @@ ALL = {
     "pencil_overlap": pencil_overlap.run,
     "plan_autotune": plan_autotune.run,
     "fft": fft_bench.run,
+    "imaging": imaging_bench.run,
 }
 
 

@@ -1,0 +1,90 @@
+"""Motion correction on k-space frames — the moco-workshop workflow on
+the paper's planned 2D engine.
+
+An MRI-style acquisition: the scanner records k-space (the centred 2D
+spectrum) of the same anatomy over several frames, but the subject moves
+between frames. The correction loop is exactly the operator set of
+``repro.imaging``:
+
+  1. ``kspace_to_image`` — centred inverse transform per frame;
+  2. ``register_phase_correlation`` — subpixel shift of every frame
+     against the reference, one batched planned transform pair;
+  3. ``apply_shift`` — Fourier-domain correction of each frame;
+  4. re-average: the corrected mean is sharp where the naive mean is
+     smeared by motion.
+
+  PYTHONPATH=src python examples/register_moco.py
+"""
+
+import numpy as np
+
+from repro.imaging import (
+    apply_shift,
+    image_to_kspace,
+    kspace_to_image,
+    register_phase_correlation,
+)
+
+
+def make_phantom(n: int = 128) -> np.ndarray:
+    """A Shepp-Logan-ish blob phantom (numpy-only, deterministic)."""
+    y, x = np.mgrid[0:n, 0:n].astype(np.float32) / n - 0.5
+    img = np.zeros((n, n), np.float32)
+    for cy, cx, ry, rx, a in [
+        (0.0, 0.0, 0.40, 0.30, 1.0),
+        (-0.1, 0.05, 0.15, 0.10, -0.4),
+        (0.15, -0.08, 0.08, 0.12, 0.6),
+        (0.2, 0.15, 0.05, 0.05, 0.8),
+    ]:
+        img += a * (((y - cy) / ry) ** 2 + ((x - cx) / rx) ** 2 < 1.0)
+    return img
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, frames = 128, 6
+    phantom = make_phantom(n)
+
+    # Acquire: each frame is the phantom under a random inter-frame shift,
+    # recorded in k-space with a little noise.
+    true_shifts = np.round(rng.uniform(-6, 6, size=(frames, 2)) * 4) / 4
+    true_shifts[0] = 0.0
+    moved = np.stack(
+        [np.asarray(apply_shift(phantom, s)) for s in true_shifts]
+    )
+    kspace = np.asarray(image_to_kspace(moved))
+    kspace = kspace + 0.01 * (
+        rng.standard_normal(kspace.shape) + 1j * rng.standard_normal(kspace.shape)
+    ).astype(np.complex64)
+
+    # Reconstruct and register every frame against frame 0 (one batched
+    # call: the planner tunes ONE fft2d problem for the whole series).
+    recon = np.asarray(kspace_to_image(kspace))
+    magnitude = np.abs(recon).astype(np.float32)
+    refs = np.broadcast_to(magnitude[0], magnitude.shape)
+    shifts = np.asarray(
+        register_phase_correlation(refs, magnitude, upsample_factor=8)
+    )
+
+    # Correct in the Fourier domain and re-average.
+    corrected = np.asarray(apply_shift(magnitude, shifts))
+    naive_err = np.abs(magnitude.mean(0) - phantom).mean()
+    moco_err = np.abs(corrected.mean(0) - phantom).mean()
+
+    print("frame   true shift        recovered (-shift)")
+    for f in range(frames):
+        print(
+            f"  {f}   ({true_shifts[f][0]:+6.2f}, {true_shifts[f][1]:+6.2f})"
+            f"   ({-shifts[f][0]:+6.2f}, {-shifts[f][1]:+6.2f})"
+        )
+    worst = np.abs(shifts + true_shifts).max()
+    print(f"worst shift error : {worst:.3f} px (subpixel grid 1/8 px)")
+    print(f"naive average err : {naive_err:.4f}")
+    print(f"moco  average err : {moco_err:.4f}")
+    assert worst <= 0.25, "registration drifted off the acquisition shifts"
+    assert moco_err < 0.5 * naive_err, "motion correction did not help"
+    print("OK: motion-corrected average is sharp; registration matched truth")
+
+
+if __name__ == "__main__":
+    main()

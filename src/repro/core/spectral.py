@@ -70,7 +70,10 @@ def fourier_mixing_rfft(x: jax.Array, variant: Variant = "auto") -> jax.Array:
 
 
 def _next_pow2(n: int) -> int:
-    return 1 << (n - 1).bit_length()
+    """Power-of-two cover of ``n``, floored at 2 (the engines' minimum
+    transform length). Shared by fftconv, the imaging tiled-convolution
+    padding and the planner's oaconv2d tile sweep."""
+    return max(2, 1 << max(int(n) - 1, 0).bit_length())
 
 
 def fftconv(x: jax.Array, kernel: jax.Array, variant: Variant = "auto") -> jax.Array:

@@ -1,0 +1,53 @@
+"""repro.imaging — spectral image processing on the paper's 2D engine.
+
+The source paper motivates its area-efficient 2D FFT with imaging
+workloads — medical image processing, digital holography, correlation
+pattern recognition — but a transform alone is not a workload. This
+subsystem is the workload layer: the operator set an imaging user
+actually calls, each one built ON the ``repro.xfft``/``repro.plan``
+stack (every FFT in here resolves through the planner; none reaches
+into the engines privately):
+
+* :mod:`repro.imaging.psd` — periodic-plus-smooth decomposition
+  (Moisan; Mahmood et al.'s simultaneous edge-artifact removal):
+  ``psd_decompose`` / ``fft2_psd`` give spectra free of the cross-shaped
+  boundary artifact that plain windowless ``fft2`` stamps on every
+  natural image.
+* :mod:`repro.imaging.registration` — translation registration /
+  motion correction: ``register_phase_correlation`` (whole-pixel peak +
+  subpixel upsampled-DFT refinement) and ``apply_shift`` (Fourier shift
+  theorem).
+* :mod:`repro.imaging.kspace` — the MRI community's centered-transform
+  convention (``fftshift(fft2(ifftshift(·)))``, ortho-normalised):
+  ``image_to_kspace`` / ``kspace_to_image`` with batched leading axes.
+* :mod:`repro.imaging.tiled` — overlap-save tiled FFT convolution:
+  ``oaconvolve2`` handles images far larger than any single transform
+  by streaming VMEM-sized tiles (tile picked by the planner's
+  ``oaconv2d`` kind against the fused kernels' working-set census);
+  ``fftconv2`` is the single-transform reference and small-input path;
+  ``matched_filter2`` is the paper's correlation-recognition application
+  at arbitrary scene size.
+
+Serving lives in :class:`repro.serve.ImagingService`, which batches
+registration and convolution requests by problem key the same way
+``SpectrumService`` batches bare transforms.
+"""
+
+from repro.imaging.kspace import image_to_kspace, kspace_to_image
+from repro.imaging.psd import fft2_psd, psd_decompose
+from repro.imaging.registration import apply_shift, register_phase_correlation
+from repro.imaging.synthetic import band_limited_frame
+from repro.imaging.tiled import fftconv2, matched_filter2, oaconvolve2
+
+__all__ = [
+    "band_limited_frame",
+    "psd_decompose",
+    "fft2_psd",
+    "register_phase_correlation",
+    "apply_shift",
+    "image_to_kspace",
+    "kspace_to_image",
+    "oaconvolve2",
+    "fftconv2",
+    "matched_filter2",
+]

@@ -1,0 +1,59 @@
+"""Centered k-space transforms — the MRI community's convention.
+
+MRI raw data ("k-space") puts the zero-frequency sample at the ARRAY
+CENTRE, not at index 0, and uses the unitary (``ortho``) scaling so the
+forward/adjoint pair used in iterative reconstruction is an isometry.
+The moco-workshop operators (``/root/related``) spell this
+
+    kspace = fftshift(fft2(ifftshift(image)))     # norm="ortho"
+    image  = fftshift(ifft2(ifftshift(kspace)))
+
+and every reconstruction/motion-correction step composes these two.
+These are those operators on the planned engine: the inner transform
+resolves through ``repro.plan`` like any other ``repro.xfft`` call, the
+shifts are index rolls, and leading axes (coils, frames, slices) batch
+through untouched.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import repro.xfft as xfft
+
+__all__ = ["image_to_kspace", "kspace_to_image"]
+
+
+def image_to_kspace(
+    image: jax.Array,
+    axes: Tuple[int, int] = (-2, -1),
+    norm: Optional[str] = "ortho",
+) -> jax.Array:
+    """Image -> centered k-space over ``axes`` (leading axes batched).
+
+    ``fftshift(fft2(ifftshift(image)))`` with unitary scaling by default:
+    ``kspace_to_image(image_to_kspace(x)) == x`` and energy is preserved
+    (Parseval) — the contract iterative reconstruction relies on.
+    """
+    image = jnp.asarray(image)
+    if not jnp.issubdtype(image.dtype, jnp.complexfloating):
+        image = image.astype(jnp.complex64)
+    shifted = xfft.ifftshift(image, axes=axes)
+    spectrum = xfft.fft2(shifted, axes=axes, norm=norm)
+    return xfft.fftshift(spectrum, axes=axes)
+
+
+def kspace_to_image(
+    kspace: jax.Array,
+    axes: Tuple[int, int] = (-2, -1),
+    norm: Optional[str] = "ortho",
+) -> jax.Array:
+    """Centered k-space -> image over ``axes`` (exact inverse of
+    :func:`image_to_kspace` under the same ``norm``)."""
+    kspace = jnp.asarray(kspace).astype(jnp.complex64)
+    shifted = xfft.ifftshift(kspace, axes=axes)
+    image = xfft.ifft2(shifted, axes=axes, norm=norm)
+    return xfft.fftshift(image, axes=axes)

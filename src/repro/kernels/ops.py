@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from repro.core.fft1d import bit_reversal_permutation
 from repro.kernels.butterfly import butterfly_stage
 from repro.kernels.fft_radix2 import (
+    _FFT2_WORKING_ARRAYS,
+    _VMEM_BUDGET_BYTES,
     fft2_fits_vmem,
     fft2_fused,
     fft_fits_vmem,
@@ -45,7 +47,44 @@ __all__ = [
     "rfft2_kernel",
     "irfft2_kernel",
     "hbm_traffic_model",
+    "fft2_working_set",
+    "fft2_fits_budget",
+    "vmem_budget_bytes",
 ]
+
+#: f32 frame-sized arrays live at the real-input fused 2D kernels' peak —
+#: fewer than the complex census (``_FFT2_WORKING_ARRAYS``) because the
+#: input is one f32 pane, not re+im, and the packed panel is half-width.
+#: This is the same count the rfft2/irfft2 failover guards below pass to
+#: ``fft2_fits_vmem(..., arrays=6)``.
+_REAL2D_ARRAYS = 6
+
+
+def vmem_budget_bytes() -> int:
+    """The VMEM byte budget the fused kernels tile against (one number for
+    the whole repo: kernels, planner and imaging all size against it)."""
+    return _VMEM_BUDGET_BYTES
+
+
+def fft2_working_set(h: int, w: int, *, real: bool = False) -> int:
+    """True VMEM working set (bytes) of one fused 2D transform of (H, W).
+
+    The public spelling of the kernel census: input/output/working panes
+    plus corner-turn temporaries, all f32 frame-sized. Pair it with
+    :func:`vmem_budget_bytes` to report or reason about tile headroom
+    (``benchmarks/imaging_bench.py`` does); callers that only need the
+    yes/no answer use :func:`fft2_fits_budget`, the exact predicate the
+    kernel entry points and the ``oaconv2d`` tile planner dispatch on.
+    """
+    return h * w * 4 * (_REAL2D_ARRAYS if real else _FFT2_WORKING_ARRAYS)
+
+
+def fft2_fits_budget(h: int, w: int, *, real: bool = False) -> bool:
+    """True when a fused 2D transform of (H, W) stays inside the budget —
+    the same predicate the kernel entry points fail over on."""
+    return fft2_fits_vmem(
+        h, w, arrays=_REAL2D_ARRAYS if real else _FFT2_WORKING_ARRAYS
+    )
 
 
 def _interpret_default() -> bool:
@@ -164,7 +203,7 @@ def rfft2_kernel(x: jax.Array, *, radix: int = 2, interpret: bool | None = None)
     x = jnp.asarray(x).astype(jnp.float32)
     f, h, w, lead = _frames(x)
     xf = x.reshape(f, h, w)
-    if fft2_fits_vmem(h, w, arrays=6):
+    if fft2_fits_vmem(h, w, arrays=_REAL2D_ARRAYS):
         yr, yi = rfft2_fused(xf, radix=radix, interpret=interpret)
     else:
         # Unfused failover: row rfft kernel, corner turn in HBM, column FFT.
@@ -195,7 +234,7 @@ def irfft2_kernel(y: jax.Array, *, radix: int = 2, interpret: bool | None = None
     f, h, half, lead = _frames(y)
     w = 2 * (half - 1)
     re, im = re.reshape(f, h, half), im.reshape(f, h, half)
-    if fft2_fits_vmem(h, w, arrays=6):
+    if fft2_fits_vmem(h, w, arrays=_REAL2D_ARRAYS):
         out = irfft2_fused(re, im, radix=radix, interpret=interpret)
     else:
         # Column IFFT via the jnp engine (the odd f·(W/2+1) column batch

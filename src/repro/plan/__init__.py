@@ -11,6 +11,7 @@ from repro.plan.autotune import (
     chunk_candidates,
     estimate_plan,
     measure_plan,
+    oaconv_tile_candidates,
     variant_candidates,
 )
 from repro.plan.cache import PlanCache, default_cache, reset_default_cache
@@ -39,6 +40,7 @@ __all__ = [
     "estimate_plan",
     "execute",
     "measure_plan",
+    "oaconv_tile_candidates",
     "plan_fft",
     "problem_key",
     "reset_default_cache",

@@ -25,6 +25,10 @@ from repro.plan.plan import FFTPlan, problem_key
 
 __all__ = ["plan_fft", "execute", "resolve", "resolve_call"]
 
+#: Kinds whose MEASURE mode degrades to ESTIMATE: pencil problems need a
+#: live mesh to time; oaconv2d tile choice is analytic by construction.
+_ESTIMATE_ONLY_KINDS = ("fft2d_pencil", "oaconv2d")
+
 
 def plan_fft(
     kind: str,
@@ -37,29 +41,31 @@ def plan_fft(
     measure_iters: int = 5,
     timings_out: Optional[Dict[str, float]] = None,
     direction: str = "fwd",
-    norm: str = "backward",
     axes: Optional[Tuple[int, ...]] = None,
 ) -> FFTPlan:
     """Plan one FFT problem; consult the cache first unless ``force``.
 
     ``mode="estimate"`` is analytic and instant; ``mode="measure"`` jits
     and times every candidate schedule (pencil problems stay analytic —
-    timing them needs a live mesh). A MEASURE result replaces a cached
-    ESTIMATE plan for the same key. File-backed caches are saved after
-    every new plan so a second process re-tunes nothing.
+    timing them needs a live mesh; ``oaconv2d`` tile selection is analytic
+    too). A MEASURE result replaces a cached ESTIMATE plan for the same
+    key. File-backed caches are saved after every new plan so a second
+    process re-tunes nothing.
 
     ``direction="inv"`` plans the inverse transform, which tunes under its
-    own cache key (forward wisdom never cross-contaminates it). ``norm``
-    and ``axes`` are part of the key too — the xfft front door plans whole
-    calls, scaling convention included.
+    own cache key (forward wisdom never cross-contaminates it). ``axes``
+    is part of the key too; the ``norm`` convention is not — it is applied
+    as a scale outside the engine, so all conventions share one entry.
     """
     if mode not in ("estimate", "measure"):
         raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
     cache = cache if cache is not None else default_cache()
-    key = problem_key(kind, shape, dtype, n_devices, direction, norm, axes)
-    # Pencil problems can't be timed without a live mesh: the best we can do
-    # is the analytic model, so a cached ESTIMATE plan already is the answer.
-    effective_mode = "estimate" if kind == "fft2d_pencil" else mode
+    key = problem_key(kind, shape, dtype, n_devices, direction, axes)
+    # Pencil problems can't be timed without a live mesh, and oaconv2d tile
+    # selection is a closed-form working-set/efficiency trade-off: the best
+    # we can do is the analytic model, so a cached ESTIMATE plan already is
+    # the answer for both kinds.
+    effective_mode = "estimate" if kind in _ESTIMATE_ONLY_KINDS else mode
     if not force:
         hit = cache.get(key)
         if hit is not None and (effective_mode == "estimate" or hit.mode == "measure"):
@@ -142,7 +148,6 @@ def resolve_call(
     n_devices: int = 1,
     cache: Optional[PlanCache] = None,
     direction: str = "fwd",
-    norm: str = "backward",
     axes: Optional[Tuple[int, ...]] = None,
     mode: Optional[str] = None,
 ) -> FFTPlan:
@@ -167,7 +172,7 @@ def resolve_call(
     cfg = _active_config()
     if cache is None:
         cache = _cache_for_dir(cfg.cache_dir) if cfg.cache_dir else default_cache()
-    key = problem_key(kind, shape, dtype, n_devices, direction, norm, axes)
+    key = problem_key(kind, shape, dtype, n_devices, direction, axes)
     mode = mode if mode is not None else cfg.mode
     plan = cache.get(key)
     # A forced variant discards the planner's pick, so never pay a timed
@@ -175,7 +180,7 @@ def resolve_call(
     want_measure = (
         mode == "measure"
         and cfg.variant is None
-        and kind != "fft2d_pencil"
+        and kind not in _ESTIMATE_ONLY_KINDS
         and (plan is None or plan.mode != "measure")
     )
     if want_measure and _trace_safe():
@@ -206,8 +211,8 @@ def resolve(
 ) -> FFTPlan:
     """Cheap plan lookup for ``variant="auto"`` call sites (trace-safe).
 
-    Pre-xfft spelling of :func:`resolve_call` under the default norm and
-    canonical axes; kept so bare-problem callers read naturally.
+    Pre-xfft spelling of :func:`resolve_call` under the kind's canonical
+    axes; kept so bare-problem callers read naturally.
     """
     return resolve_call(kind, shape, dtype, n_devices, cache, direction)
 
@@ -248,4 +253,13 @@ def execute(plan: FFTPlan, x, mesh=None, axis: str = "data"):
         return fft2_pencil_overlapped(
             x, mesh, axis=axis, variant=plan.variant, chunks=plan.chunks
         )
+    if kind == "oaconv2d":
+        from repro.imaging.tiled import oaconvolve2
+
+        if not (isinstance(x, (tuple, list)) and len(x) == 2):
+            raise ValueError(
+                "execute() needs x=(image, kernel) for an oaconv2d plan"
+            )
+        image, kernel = x
+        return oaconvolve2(image, kernel, tile=plan.tile)
     raise ValueError(f"plan has unknown kind {kind!r}")

@@ -44,6 +44,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.fft1d import butterfly_counts
+from repro.core.spectral import _next_pow2
 from repro.launch.roofline import Roofline
 from repro.plan.plan import FFTPlan, ProblemKey
 
@@ -51,6 +52,7 @@ __all__ = [
     "estimate_plan",
     "measure_plan",
     "chunk_candidates",
+    "oaconv_tile_candidates",
     "variant_candidates",
 ]
 
@@ -276,8 +278,80 @@ def _estimate_unroll(key: ProblemKey) -> int:
     return 1
 
 
+def oaconv_tile_candidates(key: ProblemKey) -> List[Tuple[int, int]]:
+    """Legal FFT tiles for an overlap-save ``oaconv2d`` problem.
+
+    ``key.shape`` ends ``(H, W, KH, KW)`` — image dims then kernel dims.
+    Per axis, a tile must be a power of two at least the kernel extent
+    (otherwise the overlap-save step ``T - K + 1`` vanishes) and at most
+    the padded full-frame transform; jointly, the pair must keep the fused
+    kernel's true working set (``repro.kernels.ops.fft2_working_set``)
+    inside the VMEM budget. When even the smallest legal tile busts the
+    budget (enormous kernels), the single padded full-frame transform is
+    the fallback — the engines' unfused failover handles it.
+    """
+    if len(key.shape) < 4:
+        raise ValueError(
+            f"oaconv2d keys on (..., H, W, KH, KW); got shape {key.shape}"
+        )
+    h, w, kh, kw = key.shape[-4:]
+    real = not key.dtype.startswith("complex")
+    from repro.kernels.ops import fft2_fits_budget  # lazy: pallas import
+
+    def axis_cands(dim: int, k: int) -> List[int]:
+        lo, hi = _next_pow2(k), _next_pow2(dim + k - 1)
+        return [t for t in (1 << p for p in range(lo.bit_length() - 1,
+                                                  hi.bit_length()))
+                if lo <= t <= hi]
+
+    pairs = [
+        (th, tw)
+        for th in axis_cands(h, kh)
+        for tw in axis_cands(w, kw)
+        if fft2_fits_budget(th, tw, real=real)
+    ]
+    return pairs or [(_next_pow2(h + kh - 1), _next_pow2(w + kw - 1))]
+
+
+def _estimate_oaconv_plan(key: ProblemKey) -> FFTPlan:
+    """Pick the overlap-save FFT tile with the best modeled time.
+
+    Modeled cost of a tile = (tiles needed to cover the full-size output)
+    × (forward + inverse transform of one tile under that tile's best
+    schedule). Small tiles waste work on the K−1 overlap; big tiles waste
+    it on zero padding and fall off the fused kernel's VMEM cliff — the
+    sweet spot is exactly what the census-constrained sweep finds.
+    """
+    h, w, kh, kw = key.shape[-4:]
+    sub_kind = "rfft2d" if not key.dtype.startswith("complex") else "fft2d"
+    best: Optional[Tuple[float, str, Tuple[int, int]]] = None
+    for th, tw in oaconv_tile_candidates(key):
+        sub = ProblemKey(
+            kind=sub_kind,
+            backend=key.backend,
+            device_kind=key.device_kind,
+            shape=(th, tw),
+            dtype=key.dtype,
+            n_devices=key.n_devices,
+        )
+        times = {v: estimate_variant_time(sub, v) for v in variant_candidates(sub)}
+        variant = min(times, key=times.get)
+        n_tiles = math.ceil((h + kh - 1) / max(th - kh + 1, 1)) * math.ceil(
+            (w + kw - 1) / max(tw - kw + 1, 1)
+        )
+        total = 2.0 * times[variant] * n_tiles  # forward + inverse per tile
+        if best is None or total < best[0]:
+            best = (total, variant, (th, tw))
+    total, variant, tile = best
+    return FFTPlan(
+        key=key, variant=variant, mode="estimate", est_time_s=total, tile=tile
+    )
+
+
 def estimate_plan(key: ProblemKey) -> FFTPlan:
     """Analytic (FFTW ``ESTIMATE``) plan: no device work, microseconds."""
+    if key.kind == "oaconv2d":
+        return _estimate_oaconv_plan(key)
     times = {v: estimate_variant_time(key, v) for v in variant_candidates(key)}
     variant = min(times, key=times.get)
     return FFTPlan(
@@ -354,8 +428,9 @@ def _candidate_runners(key: ProblemKey) -> Dict[Tuple[str, int], Callable]:
                 )
         else:
             raise ValueError(
-                f"MEASURE planning for kind {key.kind!r} needs a device mesh; "
-                "use mode='estimate' (the pencil chunk model) instead"
+                f"MEASURE planning is unavailable for kind {key.kind!r} "
+                "(pencil problems need a live mesh; oaconv2d tile choice is "
+                "analytic); use mode='estimate' instead"
             )
     return runners
 

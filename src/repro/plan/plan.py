@@ -25,10 +25,22 @@ from typing import Optional, Tuple
 #: v3: norm and axes join the key (the ``repro.xfft`` front door plans whole
 #: calls, scaling convention and transform axes included, through
 #: ``resolve_call``) — v2 wisdom carries neither field, so it is orphaned.
-PLAN_SCHEMA_VERSION = 3
+#: v4: norm LEAVES the key again — the scaling convention is applied outside
+#: the engine (``repro.xfft._scale``), so backward/ortho/forward share one
+#: tuned entry and a service tuned under one convention serves all three.
+#: v4 also adds the ``oaconv2d`` problem kind (overlap-save tiled 2D
+#: convolution) and the plan ``tile`` field it resolves; v3 wisdom keyed
+#: norm-per-entry is orphaned by the version prefix.
+PLAN_SCHEMA_VERSION = 4
 
-#: Problem kinds the planner understands (r* = real-input two-for-one).
-KINDS = ("fft1d", "fft2d", "fft2d_stream", "fft2d_pencil", "rfft1d", "rfft2d")
+#: Problem kinds the planner understands (r* = real-input two-for-one;
+#: oaconv2d = overlap-save tiled 2D convolution, whose shape convention is
+#: (H, W, KH, KW) — image dims then kernel dims — and whose plan carries
+#: the FFT tile in ``FFTPlan.tile``).
+KINDS = (
+    "fft1d", "fft2d", "fft2d_stream", "fft2d_pencil", "rfft1d", "rfft2d",
+    "oaconv2d",
+)
 
 #: Concrete 1D schedules a plan may select (never "auto").
 #: radix4 = radix-4 Stockham (half the stages/twiddles); fused/fused_r4 =
@@ -39,7 +51,10 @@ PLAN_VARIANTS = ("looped", "unrolled", "stockham", "radix4", "fused", "fused_r4"
 #: separately: their conjugation wrapper and 1/N scaling shift the optimum.
 DIRECTIONS = ("fwd", "inv")
 
-#: Normalization conventions (scipy.fft names): where the 1/N lives.
+#: Normalization conventions (scipy.fft names): where the 1/N lives. The
+#: convention is NOT part of the plan key: every entry point applies the
+#: norm as a scale outside the engine, so the schedule optimum cannot
+#: depend on it and all three conventions share one tuned entry.
 NORMS = ("backward", "ortho", "forward")
 
 #: Canonical transform axes per kind — the axes every entry point moves the
@@ -53,6 +68,7 @@ _CANONICAL_AXES = {
     "rfft2d": (-2, -1),
     "fft2d_stream": (-2, -1),
     "fft2d_pencil": (-2, -1),
+    "oaconv2d": (-2, -1),
 }
 
 
@@ -72,7 +88,6 @@ class ProblemKey:
     dtype: str                 # canonical dtype name, e.g. "complex64"
     n_devices: int = 1
     direction: str = "fwd"     # "fwd" | "inv" — inverse transforms tune apart
-    norm: str = "backward"     # scaling convention the call was made under
     axes: Tuple[int, ...] = () # transform axes; () -> canonical for the kind
 
     def __post_init__(self):
@@ -82,8 +97,6 @@ class ProblemKey:
             raise ValueError(
                 f"unknown direction {self.direction!r}; want one of {DIRECTIONS}"
             )
-        if self.norm not in NORMS:
-            raise ValueError(f"unknown norm {self.norm!r}; want one of {NORMS}")
         object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
         axes = tuple(int(a) for a in self.axes) or _CANONICAL_AXES[self.kind]
         object.__setattr__(self, "axes", axes)
@@ -95,7 +108,7 @@ class ProblemKey:
         return (
             f"v{PLAN_SCHEMA_VERSION}|{self.kind}|{self.direction}|{self.backend}"
             f"|{self.device_kind}|{shape}|{self.dtype}|d{self.n_devices}"
-            f"|{self.norm}|ax{axes}"
+            f"|ax{axes}"
         )
 
     def to_dict(self) -> dict:
@@ -107,7 +120,6 @@ class ProblemKey:
             "dtype": self.dtype,
             "n_devices": self.n_devices,
             "direction": self.direction,
-            "norm": self.norm,
             "axes": list(self.axes),
         }
 
@@ -121,7 +133,6 @@ class ProblemKey:
             dtype=d["dtype"],
             n_devices=int(d["n_devices"]),
             direction=d.get("direction", "fwd"),
-            norm=d.get("norm", "backward"),
             axes=tuple(d.get("axes", ())),
         )
 
@@ -139,6 +150,10 @@ class FFTPlan:
       precision   — accumulation dtype policy (the paper engine is c64).
       unroll      — ``lax.scan`` unroll for the streaming pipeline.
       chunks      — corner-turn slab count for the overlapped pencil path.
+      tile        — (TH, TW) FFT tile for ``oaconv2d`` plans: the largest
+                    tile whose fused-kernel working set stays inside VMEM
+                    with the best compute-per-output ratio; ``None`` for
+                    every other kind.
     """
 
     key: ProblemKey
@@ -150,6 +165,7 @@ class FFTPlan:
     mode: str = "estimate"             # "estimate" | "measure"
     est_time_s: float = 0.0            # roofline-model time (ESTIMATE)
     measured_us: Optional[float] = None  # winning candidate time (MEASURE)
+    tile: Optional[Tuple[int, int]] = None  # oaconv2d FFT tile (TH, TW)
 
     def __post_init__(self):
         if self.variant not in PLAN_VARIANTS:
@@ -171,10 +187,12 @@ class FFTPlan:
             "mode": self.mode,
             "est_time_s": self.est_time_s,
             "measured_us": self.measured_us,
+            "tile": None if self.tile is None else list(self.tile),
         }
 
     @classmethod
     def from_dict(cls, d: dict) -> "FFTPlan":
+        tile = d.get("tile")
         return cls(
             key=ProblemKey.from_dict(d["key"]),
             variant=d["variant"],
@@ -185,6 +203,7 @@ class FFTPlan:
             mode=d["mode"],
             est_time_s=float(d["est_time_s"]),
             measured_us=None if d.get("measured_us") is None else float(d["measured_us"]),
+            tile=None if tile is None else (int(tile[0]), int(tile[1])),
         )
 
 
@@ -194,13 +213,14 @@ def problem_key(
     dtype: str = "complex64",
     n_devices: int = 1,
     direction: str = "fwd",
-    norm: str = "backward",
     axes: Optional[Tuple[int, ...]] = None,
 ) -> ProblemKey:
     """Build a :class:`ProblemKey` for the *current* JAX backend/device.
 
     ``axes=None`` keys on the kind's canonical axes (transform axes moved
-    last), which is what every entry point does before dispatching.
+    last), which is what every entry point does before dispatching. The
+    ``norm`` convention is deliberately absent: it is a post-engine scale,
+    so all three conventions resolve to the same key (schema v4).
     """
     import jax
 
@@ -213,6 +233,5 @@ def problem_key(
         dtype=str(dtype),
         n_devices=int(n_devices),
         direction=direction,
-        norm=norm,
         axes=tuple(axes) if axes else (),
     )

@@ -1,3 +1,15 @@
 from repro.serve.engine import ServeEngine, SpectrumRequest, SpectrumService
+from repro.serve.imaging import (
+    ConvolutionRequest,
+    ImagingService,
+    RegistrationRequest,
+)
 
-__all__ = ["ServeEngine", "SpectrumRequest", "SpectrumService"]
+__all__ = [
+    "ServeEngine",
+    "SpectrumRequest",
+    "SpectrumService",
+    "ImagingService",
+    "RegistrationRequest",
+    "ConvolutionRequest",
+]

@@ -1,0 +1,170 @@
+"""Imaging request serving: registration + tiled convolution, batched.
+
+:class:`ImagingService` extends :class:`SpectrumService` from bare
+transforms to the ``repro.imaging`` operator set, with the same serving
+policy: group requests by PROBLEM KEY, resolve one plan per group
+through ``repro.plan``, and run each group as a single batched call.
+
+* registration requests group by (frame shape, realness, upsample
+  factor): one ``rfft2``/``irfft2`` round trip registers the whole
+  group, one plan cache entry serves every future batch of that shape;
+* convolution requests group by (image shape, kernel shape, mode,
+  realness): the group shares one ``oaconv2d`` plan — i.e. one
+  overlap-save tile — and the per-request kernels ride the batched
+  leading axis of :func:`repro.imaging.tiled.oaconvolve2`;
+* plain :class:`SpectrumRequest` frames still work; a mixed queue is
+  partitioned and each family served by its own grouping.
+
+Like the parent, the service honours scoped :func:`repro.xfft.config`
+overrides unless the constructor pinned ``plan_mode``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import SpectrumRequest, SpectrumService
+
+__all__ = ["RegistrationRequest", "ConvolutionRequest", "ImagingService"]
+
+
+@dataclasses.dataclass
+class RegistrationRequest:
+    """Estimate the translation registering ``mov`` onto ``ref``."""
+
+    ref: np.ndarray                         # (H, W) real or complex
+    mov: np.ndarray                         # (H, W), same shape/realness
+    upsample: int = 1                       # >1 -> subpixel refinement
+    shift: np.ndarray | None = None         # filled by serve: (2,) float32
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ConvolutionRequest:
+    """Convolve ``image`` with ``kernel`` (overlap-save, plan-tiled)."""
+
+    image: np.ndarray                       # (H, W) real or complex
+    kernel: np.ndarray                      # (KH, KW)
+    mode: str = "same"                      # "full" | "same" | "valid"
+    out: np.ndarray | None = None           # filled by serve
+    done: bool = False
+
+
+class ImagingService(SpectrumService):
+    """Plan-aware batched serving for spectra, registration and convolution."""
+
+    def serve(self, requests: list) -> list:
+        """Process a mixed request queue in-place; returns the same list.
+
+        The whole queue is partitioned AND shape-validated before any
+        group executes, so an invalid request fails the call without
+        leaving the queue half-served.
+        """
+        spectra, registrations, convolutions = [], [], []
+        for i, r in enumerate(requests):
+            if isinstance(r, SpectrumRequest):
+                spectra.append(r)
+            elif isinstance(r, RegistrationRequest):
+                ref, mov = np.asarray(r.ref), np.asarray(r.mov)
+                if ref.ndim != 2 or ref.shape != mov.shape:
+                    raise ValueError(
+                        f"request {i}: ref/mov must be matching (H, W) "
+                        f"frames, got {ref.shape} vs {mov.shape}"
+                    )
+                registrations.append(r)
+            elif isinstance(r, ConvolutionRequest):
+                image, kernel = np.asarray(r.image), np.asarray(r.kernel)
+                if image.ndim != 2 or kernel.ndim != 2:
+                    raise ValueError(
+                        f"request {i}: image and kernel must be 2D, got "
+                        f"{image.shape} and {kernel.shape}"
+                    )
+                if r.mode not in ("full", "same", "valid"):
+                    raise ValueError(
+                        f'request {i}: mode must be "full", "same" or '
+                        f'"valid", got {r.mode!r}'
+                    )
+                if r.mode == "valid" and (
+                    kernel.shape[0] > image.shape[0]
+                    or kernel.shape[1] > image.shape[1]
+                ):
+                    raise ValueError(
+                        f"request {i}: valid-mode convolution needs "
+                        f"kernel <= image, got {kernel.shape} vs {image.shape}"
+                    )
+                convolutions.append(r)
+            else:
+                raise TypeError(
+                    f"request {i}: expected SpectrumRequest, "
+                    f"RegistrationRequest or ConvolutionRequest, got {type(r)!r}"
+                )
+        if spectra:
+            super().serve(spectra)
+        if registrations:
+            self._serve_registrations(registrations)
+        if convolutions:
+            self._serve_convolutions(convolutions)
+        return requests
+
+    # ------------------------------ groups ------------------------------
+
+    def _serve_registrations(self, items) -> None:
+        from repro.imaging import register_phase_correlation
+
+        groups: dict = {}
+        for r in items:
+            ref = np.asarray(r.ref)
+            real = not (
+                np.iscomplexobj(ref) or np.iscomplexobj(np.asarray(r.mov))
+            )
+            groups.setdefault((ref.shape, real, int(r.upsample)), []).append(r)
+        for (shape, real, upsample), members in groups.items():
+            # Warm the plan for the BATCHED problem the group's transform
+            # pair will actually run under ((B, H, W) — xfft keys on the
+            # full shape), so a repeat batch of this shape and size is a
+            # pure cache hit inside register_phase_correlation.
+            self._plan_for(
+                "rfft2d" if real else "fft2d",
+                (len(members), *shape),
+                "float32" if real else "complex64",
+            )
+            refs = jnp.asarray(np.stack([np.asarray(r.ref) for r in members]))
+            movs = jnp.asarray(np.stack([np.asarray(r.mov) for r in members]))
+            shifts = np.asarray(
+                register_phase_correlation(refs, movs, upsample_factor=upsample)
+            )
+            for r, shift in zip(members, shifts):
+                r.shift = shift
+                r.done = True
+
+    def _serve_convolutions(self, items) -> None:
+        from repro.imaging import oaconvolve2
+
+        groups: dict = {}
+        for r in items:
+            image = np.asarray(r.image)
+            real = not (
+                np.iscomplexobj(image) or np.iscomplexobj(np.asarray(r.kernel))
+            )
+            groups.setdefault(
+                (image.shape, np.asarray(r.kernel).shape, r.mode, real), []
+            ).append(r)
+        for (ishape, kshape, mode, real), members in groups.items():
+            # One oaconv2d plan per (image, kernel) geometry: every member
+            # shares the tile, kernels ride the batched leading axis.
+            plan = self._plan_for(
+                "oaconv2d",
+                (*ishape, *kshape),
+                "float32" if real else "complex64",
+            )
+            images = jnp.asarray(np.stack([np.asarray(r.image) for r in members]))
+            kernels = jnp.asarray(np.stack([np.asarray(r.kernel) for r in members]))
+            out = np.asarray(
+                oaconvolve2(images, kernels, mode=mode, tile=plan.tile)
+            )
+            for r, res in zip(members, out):
+                r.out = res
+                r.done = True

@@ -1,7 +1,8 @@
 """repro.xfft — the unified, scipy.fft-style front door to the engine.
 
 One namespace, eight transforms (`fft`/`ifft`, `fft2`/`ifft2`, `rfft`/
-`irfft`, `rfft2`/`irfft2`), N-D helpers (`fftn`/`ifftn`), shift utilities
+`irfft`, `rfft2`/`irfft2`), N-D helpers (`fftn`/`ifftn` and the real-input
+`rfftn`/`irfftn`), shift utilities
 (`fftshift`/`ifftshift`, plus the 2D conveniences `fftshift2`/
 `ifftshift2`), `norm="backward"|"ortho"|"forward"` conventions and
 arbitrary `axes=` — all dispatched through ``repro.plan``.
@@ -47,8 +48,10 @@ from repro.xfft._transforms import (
     ifftshift2,
     irfft,
     irfft2,
+    irfftn,
     rfft,
     rfft2,
+    rfftn,
 )
 
 __all__ = [
@@ -62,6 +65,8 @@ __all__ = [
     "irfft",
     "rfft2",
     "irfft2",
+    "rfftn",
+    "irfftn",
     "fftshift",
     "ifftshift",
     "fftshift2",

@@ -37,7 +37,7 @@ from repro.plan.plan import NORMS
 
 __all__ = [
     "fft", "ifft", "fft2", "ifft2", "fftn", "ifftn",
-    "rfft", "irfft", "rfft2", "irfft2",
+    "rfft", "irfft", "rfft2", "irfft2", "rfftn", "irfftn",
     "fftshift", "ifftshift", "fftshift2", "ifftshift2",
 ]
 
@@ -115,7 +115,7 @@ def fft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
         x = _resize_axis(x, int(n), ax)
     length = x.shape[ax]
     _check_pow2(length, ax, "fft")
-    plan = resolve_call("fft1d", _moved_shape(x.shape, ax), norm=norm)
+    plan = resolve_call("fft1d", _moved_shape(x.shape, ax))
     y = _fft_impl(x, axis=ax, variant=plan.variant)
     return _scale(y, norm, length, forward=True)
 
@@ -129,9 +129,7 @@ def ifft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None)
         x = _resize_axis(x, int(n), ax)
     length = x.shape[ax]
     _check_pow2(length, ax, "ifft")
-    plan = resolve_call(
-        "fft1d", _moved_shape(x.shape, ax), direction="inv", norm=norm
-    )
+    plan = resolve_call("fft1d", _moved_shape(x.shape, ax), direction="inv")
     y = _ifft_impl(x, axis=ax, variant=plan.variant)
     return _scale(y, norm, length, forward=False)
 
@@ -169,7 +167,7 @@ def fft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     """2D FFT over ``axes``; scipy.fft-compatible, plan-backed dispatch."""
     x, norm, canon, moved = _prep_2d(x, s, axes, norm, "fft2")
     h, w = x.shape[-2], x.shape[-1]
-    plan = resolve_call("fft2d", x.shape, norm=norm)
+    plan = resolve_call("fft2d", x.shape)
     y = _fft2_impl(x, variant=plan.variant)
     return _unmove_2d(_scale(y, norm, h * w, forward=True), canon, moved)
 
@@ -178,7 +176,7 @@ def ifft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     """Inverse 2D FFT over ``axes`` (norm-aware, plan-backed)."""
     x, norm, canon, moved = _prep_2d(x, s, axes, norm, "ifft2")
     h, w = x.shape[-2], x.shape[-1]
-    plan = resolve_call("fft2d", x.shape, direction="inv", norm=norm)
+    plan = resolve_call("fft2d", x.shape, direction="inv")
     y = _ifft2_impl(x, variant=plan.variant)
     return _unmove_2d(_scale(y, norm, h * w, forward=False), canon, moved)
 
@@ -247,9 +245,7 @@ def rfft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None)
         x = _resize_axis(x, int(n), ax)
     length = x.shape[ax]
     _check_pow2(length, ax, "rfft")
-    plan = resolve_call(
-        "rfft1d", _moved_shape(x.shape, ax), dtype="float32", norm=norm
-    )
+    plan = resolve_call("rfft1d", _moved_shape(x.shape, ax), dtype="float32")
     y = _rfft_impl(x, axis=ax, variant=plan.variant)
     return _scale(y, norm, length, forward=True)
 
@@ -265,9 +261,7 @@ def irfft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None
     # numpy semantics: the spectrum is cropped/zero-padded to n//2+1 bins.
     x = _resize_axis(x, length // 2 + 1, ax)
     key_shape = _moved_shape(x.shape, ax)[:-1] + (length,)
-    plan = resolve_call(
-        "rfft1d", key_shape, dtype="float32", direction="inv", norm=norm
-    )
+    plan = resolve_call("rfft1d", key_shape, dtype="float32", direction="inv")
     y = _irfft_impl(x, axis=ax, variant=plan.variant)
     return _scale(y, norm, length, forward=False)
 
@@ -277,7 +271,7 @@ def rfft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     x = _check_real(x, "rfft2")
     x, norm, canon, moved = _prep_2d(x, s, axes, norm, "rfft2")
     h, w = x.shape[-2], x.shape[-1]
-    plan = resolve_call("rfft2d", x.shape, dtype="float32", norm=norm)
+    plan = resolve_call("rfft2d", x.shape, dtype="float32")
     y = _rfft2_impl(x, variant=plan.variant)
     return _unmove_2d(_scale(y, norm, h * w, forward=True), canon, moved)
 
@@ -302,10 +296,64 @@ def irfft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     _check_pow2(w, canon[1], "irfft2")
     x = _resize_axis(_resize_axis(x, h, -2), w // 2 + 1, -1)
     plan = resolve_call(
-        "rfft2d", x.shape[:-1] + (w,), dtype="float32", direction="inv", norm=norm
+        "rfft2d", x.shape[:-1] + (w,), dtype="float32", direction="inv"
     )
     y = _irfft2_impl(x, variant=plan.variant)
     return _unmove_2d(_scale(y, norm, h * w, forward=False), canon, moved)
+
+
+# ------------------------------ N-D real ------------------------------
+
+
+def rfftn(x, s=None, axes=None, norm: Optional[str] = None):
+    """N-D real-input FFT: the two-for-one ``rfft`` along the LAST of
+    ``axes``, complex passes over the rest — a real array never round-trips
+    through a full complex ``fftn`` (half the arithmetic and traffic on the
+    innermost, largest pass). 1- and 2-axis calls take the dedicated
+    ``rfft1d``/``rfft2d`` planning kinds."""
+    x = _check_real(x, "rfftn")
+    axes = _fftn_axes(x, s, axes, "rfftn")
+    if len(axes) == 1:
+        return rfft(x, n=None if s is None else int(s[0]), axis=axes[0], norm=norm)
+    if len(axes) == 2:
+        return rfft2(x, s=s, axes=axes, norm=norm)
+    norm = _check_norm(norm)
+    canon = _canon_axes(axes, x.ndim, "rfftn")
+    if s is not None:
+        for target, ax in zip(s, canon):
+            x = _resize_axis(x, int(target), ax)
+    total = 1
+    for ax in canon:
+        total *= x.shape[ax]
+    y = rfft(x, axis=canon[-1])
+    for ax in canon[:-1]:
+        y = fft(y, axis=ax)
+    return _scale(y, norm, total, forward=True)
+
+
+def irfftn(x, s=None, axes=None, norm: Optional[str] = None):
+    """Inverse of :func:`rfftn`: complex inverse passes over the leading
+    axes, then the half-spectrum ``irfft`` along the last -> real output."""
+    axes_in = axes
+    x = jnp.asarray(x).astype(jnp.complex64)
+    axes = _fftn_axes(x, s, axes_in, "irfftn")
+    if len(axes) == 1:
+        return irfft(x, n=None if s is None else int(s[0]), axis=axes[0], norm=norm)
+    if len(axes) == 2:
+        return irfft2(x, s=s, axes=axes, norm=norm)
+    norm = _check_norm(norm)
+    canon = _canon_axes(axes, x.ndim, "irfftn")
+    total = 1
+    for i, ax in enumerate(canon[:-1]):
+        if s is not None:
+            x = _resize_axis(x, int(s[i]), ax)
+        total *= x.shape[ax]
+        x = ifft(x, axis=ax)
+    last = canon[-1]
+    n_last = int(s[-1]) if s is not None else 2 * (x.shape[last] - 1)
+    total *= n_last
+    y = irfft(x, n=n_last, axis=last)
+    return _scale(y, norm, total, forward=False)
 
 
 # ------------------------------- shifts -------------------------------

@@ -1,0 +1,34 @@
+"""Shared imaging test helpers (numpy-only; the code under test is jax)."""
+
+import numpy as np
+
+# The one band-limited frame generator, shared with benchmarks and other
+# test trees (subpixel shifts are well posed on its output).
+from repro.imaging.synthetic import band_limited_frame as smooth_image
+
+__all__ = ["smooth_image", "conv2_full_oracle", "crop_oracle"]
+
+
+def conv2_full_oracle(image: np.ndarray, kernel: np.ndarray) -> np.ndarray:
+    """Full linear 2D convolution via numpy's (size-exact) FFT."""
+    fh = image.shape[-2] + kernel.shape[-2] - 1
+    fw = image.shape[-1] + kernel.shape[-1] - 1
+    if np.iscomplexobj(image) or np.iscomplexobj(kernel):
+        return np.fft.ifft2(
+            np.fft.fft2(image, s=(fh, fw)) * np.fft.fft2(kernel, s=(fh, fw))
+        )
+    return np.fft.irfft2(
+        np.fft.rfft2(image, s=(fh, fw)) * np.fft.rfft2(kernel, s=(fh, fw)),
+        s=(fh, fw),
+    )
+
+
+def crop_oracle(full: np.ndarray, h: int, w: int, kh: int, kw: int, mode: str):
+    """Crop a full conv oracle to scipy's mode conventions (matching
+    repro.imaging.tiled._crop_mode)."""
+    if mode == "full":
+        return full
+    if mode == "same":
+        top, left = (kh - 1) // 2, (kw - 1) // 2
+        return full[..., top:top + h, left:left + w]
+    return full[..., kh - 1:h, kw - 1:w]

@@ -1,0 +1,15 @@
+"""Shared imaging fixtures."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def natural_image():
+    """A frame with the statistics that produce the cross artifact: a
+    strong non-periodic ramp (opposite borders mismatch) plus texture."""
+    rng = np.random.default_rng(7)
+    i, j = np.mgrid[0:64, 0:128]
+    return (0.05 * i + 0.03 * j + 0.2 * rng.standard_normal((64, 128))).astype(
+        np.float32
+    )

@@ -1,0 +1,104 @@
+"""The ISSUE 4 acceptance gate: every imaging op resolves its transforms
+through repro.plan (spy on resolve_call; forced-dispatch reroutes), and
+the whole surface is DeprecationWarning-free (no legacy core shims)."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.imaging.tiled as tiled
+import repro.xfft as xfft
+import repro.xfft._transforms as _transforms
+from repro.imaging import (
+    apply_shift,
+    fft2_psd,
+    fftconv2,
+    image_to_kspace,
+    kspace_to_image,
+    matched_filter2,
+    oaconvolve2,
+    psd_decompose,
+    register_phase_correlation,
+)
+from repro.plan.api import resolve_call as _real_resolve_call
+
+
+@pytest.fixture
+def plan_calls(monkeypatch):
+    """Record every planner resolution made by the xfft front door and
+    the imaging tile picker; error on any DeprecationWarning (legacy
+    ``repro.core`` shims would emit one)."""
+    calls = []
+
+    def spy(kind, shape, *args, **kwargs):
+        calls.append(kind)
+        return _real_resolve_call(kind, shape, *args, **kwargs)
+
+    monkeypatch.setattr(_transforms, "resolve_call", spy)
+    monkeypatch.setattr(tiled, "resolve_call", spy)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        yield calls
+
+
+@pytest.fixture
+def frame(rng):
+    return rng.standard_normal((32, 32)).astype(np.float32)
+
+
+def test_psd_resolves_through_plan(plan_calls, frame):
+    psd_decompose(frame)
+    assert "fft1d" in plan_calls and "fft2d" in plan_calls  # borders + inverse
+    plan_calls.clear()
+    fft2_psd(frame)
+    assert plan_calls.count("fft1d") == 2 and "fft2d" in plan_calls
+
+
+def test_registration_resolves_through_plan(plan_calls, frame):
+    register_phase_correlation(frame, frame[::-1].copy(), upsample_factor=4)
+    assert plan_calls.count("rfft2d") == 3  # two forward + one inverse
+    plan_calls.clear()
+    apply_shift(frame, (1.0, 2.0))
+    assert plan_calls.count("rfft2d") == 2
+
+
+def test_kspace_resolves_through_plan(plan_calls, frame):
+    kspace_to_image(image_to_kspace(frame))
+    assert plan_calls.count("fft2d") == 2
+
+
+def test_convolution_resolves_through_plan(plan_calls, rng, frame):
+    kernel = rng.standard_normal((5, 5)).astype(np.float32)
+    oaconvolve2(frame, kernel)
+    assert plan_calls[0] == "oaconv2d"       # the tile itself is planned
+    assert "rfft2d" in plan_calls            # per-tile transforms follow
+    plan_calls.clear()
+    fftconv2(frame, kernel)
+    assert plan_calls.count("rfft2d") == 3
+    plan_calls.clear()
+    matched_filter2(frame, kernel, tile=(16, 16))
+    assert "rfft2d" in plan_calls and "oaconv2d" not in plan_calls  # tile pinned
+
+
+def test_forced_dispatch_reaches_imaging_ops(rng, monkeypatch):
+    """A scoped variant override must reroute the transforms INSIDE the
+    imaging ops — proof their FFTs go through resolve_call, not around it."""
+    import repro.kernels.ops as ops
+
+    kernel_calls = []
+    real_kernel = ops.rfft2_kernel
+
+    def spy(x, **kw):
+        kernel_calls.append(np.asarray(x).shape)
+        return real_kernel(x, **kw)
+
+    monkeypatch.setattr(ops, "rfft2_kernel", spy)
+    frame = rng.standard_normal((16, 16)).astype(np.float32)
+    apply_shift(frame, (1.0, 0.0))
+    assert kernel_calls == []                # ESTIMATE on CPU: jnp engines
+    with xfft.config(variant="fused_r4"):
+        apply_shift(frame, (1.0, 0.0))
+    assert len(kernel_calls) == 1            # forced, exactly once, in scope
+    apply_shift(frame, (1.0, 0.0))
+    assert len(kernel_calls) == 1            # nothing leaked past the scope

@@ -1,0 +1,58 @@
+"""Centered k-space operators: round trip, DC centering, unitarity."""
+
+import numpy as np
+import pytest
+
+from repro.imaging import image_to_kspace, kspace_to_image
+
+
+def complex_frame(rng, shape):
+    return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(
+        np.complex64
+    )
+
+
+def test_round_trip_is_identity(rng):
+    x = complex_frame(rng, (32, 64))
+    back = np.asarray(kspace_to_image(image_to_kspace(x)))
+    np.testing.assert_allclose(back, x, atol=1e-4)
+
+
+def test_dc_lands_at_array_centre():
+    const = np.ones((16, 16), np.float32)
+    k = np.abs(np.asarray(image_to_kspace(const)))
+    assert np.unravel_index(k.argmax(), k.shape) == (8, 8)
+    assert k.sum() == pytest.approx(k[8, 8])  # a constant is pure DC
+
+
+def test_ortho_norm_preserves_energy(rng):
+    x = complex_frame(rng, (32, 32))
+    k = np.asarray(image_to_kspace(x))
+    assert np.linalg.norm(k) == pytest.approx(np.linalg.norm(x), rel=1e-4)
+
+
+def test_matches_numpy_centered_convention(rng):
+    """The moco-workshop spelling, verbatim in numpy, is the oracle."""
+    x = complex_frame(rng, (16, 32))
+    want = np.fft.fftshift(np.fft.fft2(np.fft.ifftshift(x), norm="ortho"))
+    np.testing.assert_allclose(np.asarray(image_to_kspace(x)), want, atol=1e-4)
+    want_inv = np.fft.fftshift(np.fft.ifft2(np.fft.ifftshift(x), norm="ortho"))
+    np.testing.assert_allclose(np.asarray(kspace_to_image(x)), want_inv, atol=1e-4)
+
+
+def test_batched_leading_axes(rng):
+    frames = complex_frame(rng, (3, 2, 16, 16))  # e.g. (coil, frame, H, W)
+    k = np.asarray(image_to_kspace(frames))
+    assert k.shape == frames.shape
+    np.testing.assert_allclose(
+        k[1, 0], np.asarray(image_to_kspace(frames[1, 0])), atol=1e-5
+    )
+
+
+def test_alternate_axes(rng):
+    x = complex_frame(rng, (16, 4, 32))
+    k = np.asarray(image_to_kspace(x, axes=(0, 2)))
+    want = np.stack(
+        [np.asarray(image_to_kspace(x[:, c, :])) for c in range(4)], axis=1
+    )
+    np.testing.assert_allclose(k, want, atol=1e-5)

@@ -1,0 +1,90 @@
+"""Phase-correlation registration: whole-pixel recovery (incl. wraps and
+odd shifts), subpixel refinement, batching, and the shift operator."""
+
+import numpy as np
+import pytest
+
+from _helpers import smooth_image
+
+from repro.imaging import apply_shift, register_phase_correlation
+
+
+@pytest.mark.parametrize("shift", [(0, 0), (5, 9), (-7, 3), (31, -17), (1, -1)])
+def test_whole_pixel_shifts_recovered(shift):
+    ref = smooth_image(64, seed=3)
+    mov = np.asarray(apply_shift(ref, np.asarray(shift, np.float32)))
+    got = np.asarray(register_phase_correlation(ref, mov))
+    np.testing.assert_array_equal(got, [-shift[0], -shift[1]])
+
+
+def test_registration_round_trip_realigns():
+    ref = smooth_image(64, seed=4)
+    mov = np.asarray(apply_shift(ref, (11.0, -6.0)))
+    shift = register_phase_correlation(ref, mov)
+    back = np.asarray(apply_shift(mov, shift))
+    np.testing.assert_allclose(back, ref, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "shift", [(2.5, -1.25), (-3.75, 4.5), (0.25, 0.75), (7.5, -0.5)]
+)
+def test_subpixel_shifts_recovered(shift):
+    """Odd (non-integer) shifts: the upsampled-DFT refinement resolves
+    quarter-pixel displacements on a band-limited frame."""
+    ref = smooth_image(64, seed=5)
+    mov = np.asarray(apply_shift(ref, np.asarray(shift, np.float32)))
+    got = np.asarray(register_phase_correlation(ref, mov, upsample_factor=8))
+    np.testing.assert_allclose(got, [-shift[0], -shift[1]], atol=1 / 8 + 1e-6)
+
+
+def test_subpixel_precision_scales_with_upsampling():
+    ref = smooth_image(64, seed=6)
+    mov = np.asarray(apply_shift(ref, (1.3, -2.6)))
+    got = np.asarray(register_phase_correlation(ref, mov, upsample_factor=20))
+    np.testing.assert_allclose(got, [-1.3, 2.6], atol=0.06)
+
+
+def test_batched_registration_one_call():
+    ref = smooth_image(32, seed=7)
+    shifts = [(1.0, 2.0), (3.0, -4.0), (-5.0, 0.0)]
+    movs = np.stack([np.asarray(apply_shift(ref, s)) for s in shifts])
+    refs = np.broadcast_to(ref, movs.shape)
+    got = np.asarray(register_phase_correlation(refs, movs))
+    np.testing.assert_array_equal(got, [[-a, -b] for a, b in shifts])
+
+
+def test_complex_frames_register():
+    rng = np.random.default_rng(8)
+    base = smooth_image(32, seed=9) + 1j * smooth_image(32, seed=10)
+    ref = base.astype(np.complex64)
+    mov = np.asarray(apply_shift(ref, (4.0, -3.0)))
+    got = np.asarray(register_phase_correlation(ref, mov))
+    np.testing.assert_array_equal(got, [-4.0, 3.0])
+    del rng
+
+
+def test_apply_shift_integer_matches_roll():
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((16, 32)).astype(np.float32)
+    got = np.asarray(apply_shift(x, (3.0, -5.0)))
+    np.testing.assert_allclose(got, np.roll(x, (3, -5), axis=(0, 1)), atol=1e-4)
+
+
+def test_apply_shift_batched_per_frame_shifts():
+    rng = np.random.default_rng(12)
+    x = rng.standard_normal((2, 16, 16)).astype(np.float32)
+    shifts = np.asarray([[1.0, 2.0], [-3.0, 4.0]], np.float32)
+    got = np.asarray(apply_shift(x, shifts))
+    for k in range(2):
+        np.testing.assert_allclose(
+            got[k],
+            np.roll(x[k], tuple(shifts[k].astype(int)), axis=(0, 1)),
+            atol=1e-4,
+        )
+
+
+def test_shape_mismatch_rejected():
+    with pytest.raises(ValueError, match="share a shape"):
+        register_phase_correlation(np.zeros((8, 8)), np.zeros((8, 16)))
+    with pytest.raises(ValueError, match="dy, dx"):
+        apply_shift(np.zeros((8, 8), np.float32), (1.0, 2.0, 3.0))

@@ -1,0 +1,44 @@
+"""Hypothesis property tests: phase correlation recovers random shifts
+(whole-pixel exactly, half-pixel to the upsampling grid).
+
+Guarded with importorskip: hypothesis is a test extra, not a runtime
+dependency."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from _helpers import smooth_image  # noqa: E402
+
+from repro.imaging import apply_shift, register_phase_correlation  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=-31, max_value=31),
+    st.integers(min_value=-31, max_value=31),
+    st.integers(min_value=0, max_value=50),
+)
+def test_integer_shifts_recover_exactly(dy, dx, seed):
+    ref = smooth_image(64, seed=seed)
+    mov = np.asarray(apply_shift(ref, (float(dy), float(dx))))
+    got = np.asarray(register_phase_correlation(ref, mov))
+    np.testing.assert_array_equal(got, [-dy, -dx])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=-15, max_value=15),
+    st.integers(min_value=-15, max_value=15),
+    st.integers(min_value=0, max_value=50),
+)
+def test_half_pixel_shifts_recover_with_upsampling(ty, tx, seed):
+    dy, dx = ty / 2.0, tx / 2.0
+    ref = smooth_image(64, seed=seed)
+    mov = np.asarray(apply_shift(ref, (dy, dx)))
+    got = np.asarray(register_phase_correlation(ref, mov, upsample_factor=4))
+    np.testing.assert_allclose(got, [-dy, -dx], atol=0.25 + 1e-6)

@@ -1,0 +1,62 @@
+"""Hypothesis property tests: overlap-save equals the one-shot spectral
+convolution for random geometries, tiles and modes.
+
+Guarded with importorskip: hypothesis is a test extra, not a runtime
+dependency."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from _helpers import conv2_full_oracle, crop_oracle  # noqa: E402
+
+from repro.imaging import oaconvolve2  # noqa: E402
+
+geometry = st.tuples(
+    st.integers(min_value=8, max_value=48),    # image H
+    st.integers(min_value=8, max_value=48),    # image W
+    st.integers(min_value=1, max_value=7),     # kernel KH
+    st.integers(min_value=1, max_value=7),     # kernel KW
+    st.integers(min_value=3, max_value=6),     # log2 tile H
+    st.integers(min_value=3, max_value=6),     # log2 tile W
+    st.sampled_from(["full", "same", "valid"]),
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(geometry)
+def test_oaconvolve2_matches_oracle_on_random_geometry(params):
+    h, w, kh, kw, lth, ltw, mode, seed = params
+    th, tw = 1 << lth, 1 << ltw
+    if th < kh or tw < kw:
+        th, tw = max(th, 1 << (kh - 1).bit_length()), max(tw, 1 << (kw - 1).bit_length())
+    rng = np.random.default_rng(seed)
+    image = rng.standard_normal((h, w)).astype(np.float32)
+    kernel = rng.standard_normal((kh, kw)).astype(np.float32)
+    oracle = crop_oracle(conv2_full_oracle(image, kernel), h, w, kh, kw, mode)
+    got = np.asarray(oaconvolve2(image, kernel, mode=mode, tile=(th, tw)))
+    assert got.shape == oracle.shape
+    scale = max(np.abs(oracle).max(), 1.0)
+    np.testing.assert_allclose(got, oracle, atol=2e-4 * scale)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=8, max_value=32),
+    st.integers(min_value=1, max_value=5),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_planner_tile_agrees_with_pinned_tiles(n, k, seed):
+    """Whatever tile the planner picks, the numbers match a pinned tile."""
+    rng = np.random.default_rng(seed)
+    image = rng.standard_normal((n, n)).astype(np.float32)
+    kernel = rng.standard_normal((k, k)).astype(np.float32)
+    auto = np.asarray(oaconvolve2(image, kernel, mode="same"))
+    pinned = np.asarray(oaconvolve2(image, kernel, mode="same", tile=(8, 8)))
+    scale = max(np.abs(pinned).max(), 1.0)
+    np.testing.assert_allclose(auto, pinned, atol=2e-4 * scale)

@@ -1,0 +1,154 @@
+"""Schema v4: norm-independent cache keys and the oaconv2d problem kind."""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro.xfft as xfft
+from repro.kernels.ops import fft2_fits_budget
+from repro.plan import (
+    PLAN_SCHEMA_VERSION,
+    PlanCache,
+    default_cache,
+    estimate_plan,
+    oaconv_tile_candidates,
+    plan_fft,
+    problem_key,
+    reset_default_cache,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default_cache():
+    reset_default_cache()
+    yield
+    reset_default_cache()
+
+
+# ------------------------- norm-independent keys -------------------------
+
+
+def test_norm_is_not_part_of_the_key(rng):
+    """backward/ortho/forward resolve to ONE tuned entry: the scale is
+    applied outside the engine, so the schedule optimum cannot differ."""
+    x = rng.standard_normal((16, 16)).astype(np.float32)
+    cache = default_cache()
+    np.asarray(xfft.rfft2(x, norm="ortho"))
+    assert len(cache) == 1
+    hits_before = cache.hits
+    np.asarray(xfft.rfft2(x, norm="forward"))
+    np.asarray(xfft.rfft2(x))
+    assert len(cache) == 1                  # still one entry
+    assert cache.hits >= hits_before + 2    # other norms HIT that entry
+
+
+def test_measure_wisdom_shared_across_norms(tmp_path, rng):
+    cache = PlanCache(path=str(tmp_path / "wisdom.json"))
+    tuned = plan_fft("fft2d", (16, 16), mode="measure", cache=cache,
+                     measure_iters=1)
+    x = (rng.standard_normal((16, 16)) + 1j * rng.standard_normal((16, 16))
+         ).astype(np.complex64)
+    with xfft.config(cache_dir=str(tmp_path)):
+        for norm in ("backward", "ortho", "forward"):
+            np.asarray(xfft.fft2(x, norm=norm))
+    # every norm resolved to the tuned plan; nothing re-tuned or added
+    assert len(PlanCache(path=str(tmp_path / "wisdom.json"))) == 1
+    assert tuned.mode == "measure"
+
+
+def test_v3_normful_wisdom_is_orphaned(tmp_path):
+    """The satellite's orphan gate: v3 entries (norm in the key) carry the
+    old version prefix, so a v4 load drops every one of them."""
+    path = str(tmp_path / "wisdom.json")
+    cache = PlanCache(path=path)
+    plan_fft("fft2d", (32, 32), mode="measure", cache=cache, measure_iters=1)
+    with open(path) as f:
+        payload = json.load(f)
+    # Rewrite the file as PR-3 code would have: v3 prefix, norm segment in
+    # the key and a "norm" field in the serialized ProblemKey.
+    payload["plan_schema_version"] = 3
+    payload["plans"] = {
+        k.replace(f"v{PLAN_SCHEMA_VERSION}|", "v3|").replace(
+            "|ax", "|backward|ax"
+        ): dict(v, key=dict(v["key"], norm="backward"))
+        for k, v in payload["plans"].items()
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    stale = PlanCache(path=path)
+    assert len(stale) == 0                  # orphaned, not mis-deserialised
+
+
+def test_problem_key_has_no_norm_field():
+    key = problem_key("fft2d", (8, 8))
+    assert not hasattr(key, "norm")
+    assert "backward" not in key.cache_key()
+
+
+# ------------------------------ oaconv2d ------------------------------
+
+
+def _okey(shape=(256, 256, 16, 16), dtype="float32"):
+    return problem_key("oaconv2d", shape, dtype=dtype)
+
+
+def test_oaconv_plan_carries_a_legal_tile():
+    plan = estimate_plan(_okey())
+    th, tw = plan.tile
+    assert th >= 16 and tw >= 16                      # step T-K+1 >= 1
+    assert (th & (th - 1)) == 0 and (tw & (tw - 1)) == 0
+    assert fft2_fits_budget(th, tw, real=True)        # kernels census holds
+    assert plan.variant in ("looped", "unrolled", "stockham", "radix4",
+                            "fused", "fused_r4")
+
+
+def test_oaconv_tile_candidates_respect_kernel_and_budget():
+    for th, tw in oaconv_tile_candidates(_okey()):
+        assert th >= 16 and tw >= 16
+        assert fft2_fits_budget(th, tw, real=True)
+    with pytest.raises(ValueError, match="H, W, KH, KW"):
+        oaconv_tile_candidates(problem_key("oaconv2d", (64, 64)))
+
+
+def test_oaconv_complex_uses_complex_census():
+    plan = estimate_plan(_okey(dtype="complex64"))
+    th, tw = plan.tile
+    assert fft2_fits_budget(th, tw, real=False)
+
+
+def test_oaconv_plan_round_trips_through_the_cache(tmp_path):
+    path = str(tmp_path / "wisdom.json")
+    cache = PlanCache(path=path)
+    plan = estimate_plan(_okey())
+    cache.put(plan)
+    cache.save()
+    again = PlanCache(path=path).get(plan.key)
+    assert again == plan and again.tile == plan.tile
+
+
+def test_oaconv_measure_mode_degrades_to_estimate(tmp_path):
+    cache = PlanCache()
+    plan = plan_fft("oaconv2d", (128, 128, 8, 8), dtype="float32",
+                    mode="measure", cache=cache)
+    assert plan.mode == "estimate" and plan.tile is not None
+
+
+def test_non_oaconv_plans_have_no_tile():
+    assert estimate_plan(problem_key("fft2d", (64, 64))).tile is None
+
+
+def test_execute_runs_an_oaconv_plan(rng):
+    from repro.plan import execute
+
+    image = rng.standard_normal((24, 24)).astype(np.float32)
+    kernel = rng.standard_normal((3, 3)).astype(np.float32)
+    plan = estimate_plan(_okey((24, 24, 3, 3)))
+    got = np.asarray(execute(plan, (image, kernel)))
+    want = np.fft.irfft2(
+        np.fft.rfft2(image, s=(26, 26)) * np.fft.rfft2(kernel, s=(26, 26)),
+        s=(26, 26),
+    )[1:25, 1:25]
+    np.testing.assert_allclose(got, want, atol=1e-3)
+    with pytest.raises(ValueError, match="image, kernel"):
+        execute(plan, image)

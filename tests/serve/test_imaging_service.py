@@ -1,0 +1,137 @@
+"""ImagingService: mixed spectrum/registration/convolution queues served
+with one plan per problem-key group."""
+
+import numpy as np
+import pytest
+
+from repro.imaging import apply_shift
+from repro.imaging.synthetic import band_limited_frame as _smooth
+from repro.serve import (
+    ConvolutionRequest,
+    ImagingService,
+    RegistrationRequest,
+    SpectrumRequest,
+)
+
+
+def test_mixed_queue_all_served(rng):
+    ref = _smooth(32, 1)
+    reqs = [
+        RegistrationRequest(ref=ref, mov=np.asarray(apply_shift(ref, (3.0, -2.0)))),
+        RegistrationRequest(ref=ref, mov=np.asarray(apply_shift(ref, (-5.0, 7.0)))),
+        ConvolutionRequest(
+            image=rng.standard_normal((40, 40)).astype(np.float32),
+            kernel=rng.standard_normal((5, 5)).astype(np.float32),
+        ),
+        SpectrumRequest(frame=rng.standard_normal((16, 16)).astype(np.float32)),
+    ]
+    out = ImagingService().serve(reqs)
+    assert out is reqs and all(r.done for r in reqs)
+    np.testing.assert_array_equal(reqs[0].shift, [-3.0, 2.0])
+    np.testing.assert_array_equal(reqs[1].shift, [5.0, -7.0])
+    conv = reqs[2]
+    fh = np.fft.irfft2(
+        np.fft.rfft2(conv.image, s=(44, 44)) * np.fft.rfft2(conv.kernel, s=(44, 44)),
+        s=(44, 44),
+    )
+    np.testing.assert_allclose(conv.out, fh[2:42, 2:42], atol=1e-3)
+    np.testing.assert_allclose(
+        reqs[3].spectrum, np.fft.rfft2(reqs[3].frame), atol=1e-3
+    )
+
+
+def test_one_plan_per_group(rng):
+    svc = ImagingService()
+    ref = _smooth(16, 2)
+
+    def queue():
+        return [
+            RegistrationRequest(ref=ref, mov=ref) for _ in range(4)
+        ] + [
+            ConvolutionRequest(
+                image=rng.standard_normal((24, 24)).astype(np.float32),
+                kernel=rng.standard_normal((3, 3)).astype(np.float32),
+            )
+            for _ in range(3)
+        ]
+
+    svc.serve(queue())
+    # one rfft2d plan for the batched registration problem ((4, 16, 16) —
+    # xfft keys on the full shape) + one oaconv2d plan for the conv
+    # geometry (batch-independent: the tile depends on frame + kernel)
+    assert len(svc.plans) == 2
+    svc.serve(queue())
+    assert len(svc.plans) == 2  # repeat groups re-decide nothing
+    assert sorted(p.key.kind for p in svc.plans.values()) == [
+        "oaconv2d", "rfft2d",
+    ]
+    reg_plan = next(p for p in svc.plans.values() if p.key.kind == "rfft2d")
+    assert reg_plan.key.shape == (4, 16, 16)  # the batched problem
+
+
+def test_convolution_group_uses_planned_tile(rng):
+    svc = ImagingService()
+    req = ConvolutionRequest(
+        image=rng.standard_normal((64, 64)).astype(np.float32),
+        kernel=rng.standard_normal((9, 9)).astype(np.float32),
+        mode="full",
+    )
+    svc.serve([req])
+    (plan,) = svc.plans.values()
+    assert plan.key.kind == "oaconv2d" and plan.tile is not None
+    fh = np.fft.irfft2(
+        np.fft.rfft2(req.image, s=(72, 72)) * np.fft.rfft2(req.kernel, s=(72, 72)),
+        s=(72, 72),
+    )
+    np.testing.assert_allclose(req.out, fh, atol=2e-3)
+
+
+def test_upsample_groups_separately(rng):
+    svc = ImagingService()
+    ref = _smooth(32, 3)
+    mov = np.asarray(apply_shift(ref, (1.5, -0.5)))
+    coarse = RegistrationRequest(ref=ref, mov=mov)
+    fine = RegistrationRequest(ref=ref, mov=mov, upsample=8)
+    svc.serve([coarse, fine])
+    np.testing.assert_allclose(fine.shift, [-1.5, 0.5], atol=0.13)
+    assert np.abs(np.asarray(coarse.shift) - np.asarray(fine.shift)).max() <= 0.5
+
+
+def test_unknown_request_type_rejected():
+    with pytest.raises(TypeError, match="expected"):
+        ImagingService().serve([object()])
+
+
+def test_bad_frames_rejected():
+    with pytest.raises(ValueError, match="matching"):
+        ImagingService().serve(
+            [RegistrationRequest(ref=np.zeros((8, 8)), mov=np.zeros((8, 4)))]
+        )
+    with pytest.raises(ValueError, match="2D"):
+        ImagingService().serve(
+            [ConvolutionRequest(image=np.zeros((2, 8, 8)), kernel=np.zeros((3, 3)))]
+        )
+
+
+def test_invalid_request_fails_before_any_work(rng):
+    """Validation is all-or-nothing: a bad request anywhere in the queue
+    means nothing in the queue is served."""
+    good = SpectrumRequest(frame=rng.standard_normal((8, 8)).astype(np.float32))
+    bad = RegistrationRequest(ref=np.zeros((2, 8, 8)), mov=np.zeros((2, 8, 8)))
+    with pytest.raises(ValueError, match="matching"):
+        ImagingService().serve([good, bad])
+    assert not good.done and good.spectrum is None
+
+    reg = RegistrationRequest(ref=np.zeros((8, 8)), mov=np.zeros((8, 8)))
+    bad_mode = ConvolutionRequest(
+        image=np.zeros((8, 8)), kernel=np.zeros((3, 3)), mode="reflect"
+    )
+    with pytest.raises(ValueError, match="mode"):
+        ImagingService().serve([reg, bad_mode])
+    assert not reg.done and reg.shift is None
+
+    too_big = ConvolutionRequest(
+        image=np.zeros((4, 4)), kernel=np.zeros((8, 8)), mode="valid"
+    )
+    with pytest.raises(ValueError, match="kernel <= image"):
+        ImagingService().serve([too_big])

@@ -1,0 +1,75 @@
+"""xfft.rfftn/irfftn vs numpy: the real N-D path never round-trips a real
+array through a complex fftn (ROADMAP PR 3 follow-on)."""
+
+import numpy as np
+import pytest
+
+import repro.xfft as xfft
+from repro.plan import NORMS
+
+
+def _real(rng, shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def _close(got, want, scale=1.0):
+    np.testing.assert_allclose(
+        np.asarray(got), want, rtol=2e-3, atol=1e-2 * scale
+    )
+
+
+@pytest.mark.parametrize("norm", NORMS)
+def test_rfftn_matches_numpy_3d(rng, norm):
+    x = _real(rng, (8, 16, 32))
+    _close(xfft.rfftn(x, norm=norm), np.fft.rfftn(x, norm=norm))
+
+
+@pytest.mark.parametrize("norm", NORMS)
+def test_irfftn_round_trips(rng, norm):
+    x = _real(rng, (4, 8, 16))
+    back = xfft.irfftn(xfft.rfftn(x, norm=norm), norm=norm)
+    _close(back, x)
+
+
+def test_rfftn_1d_and_2d_delegate_to_dedicated_kinds(rng):
+    x = _real(rng, (16, 32))
+    _close(xfft.rfftn(x, axes=(-1,)), np.fft.rfft(x))
+    _close(xfft.rfftn(x), np.fft.rfftn(x))
+    _close(xfft.irfftn(np.fft.rfftn(x).astype(np.complex64)), x)
+
+
+def test_rfftn_s_crops_and_pads(rng):
+    x = _real(rng, (8, 8, 8))
+    want = np.fft.rfftn(x, s=(4, 16, 8), axes=(0, 1, 2))
+    _close(xfft.rfftn(x, s=(4, 16, 8)), want)
+
+
+def test_irfftn_recovers_odd_less_shapes(rng):
+    x = _real(rng, (4, 8, 16))
+    spec = np.fft.rfftn(x).astype(np.complex64)
+    _close(xfft.irfftn(spec, s=x.shape), x)
+
+
+def test_rfftn_rejects_complex_input(rng):
+    z = (rng.standard_normal((8, 8, 8)) + 1j * rng.standard_normal((8, 8, 8))
+         ).astype(np.complex64)
+    with pytest.raises(TypeError, match="real input"):
+        xfft.rfftn(z)
+
+
+def test_rfftn_uses_real_kinds_not_complex_fftn(rng, monkeypatch):
+    """The satellite's whole point: the innermost (largest) pass is the
+    two-for-one real transform, and no full complex fftn ever runs."""
+    import repro.xfft._transforms as _transforms
+    from repro.plan.api import resolve_call as real_resolve_call
+
+    kinds = []
+
+    def spy(kind, shape, *args, **kwargs):
+        kinds.append(kind)
+        return real_resolve_call(kind, shape, *args, **kwargs)
+
+    monkeypatch.setattr(_transforms, "resolve_call", spy)
+    xfft.rfftn(_real(rng, (4, 8, 16)))
+    assert kinds[0] == "rfft1d"            # real pass first, on the last axis
+    assert set(kinds) == {"rfft1d", "fft1d"}
