@@ -1,38 +1,135 @@
-"""Numerical accuracy of the engine vs a float64 DFT oracle (all variants +
-the Pallas kernels), across transform sizes."""
+"""Numerical accuracy of every registered engine vs float64 references.
+
+Two sections, one JSON report (``BENCH_precision.json`` in CI):
+
+* ``single`` — each single-precision engine in the ``repro.engines``
+  registry, 1D forward transform vs a float64 DFT oracle, across sizes
+  (the registry is the sweep source: a new engine registration is a new
+  report row, no edits here).
+* ``double`` — the ``precision="double"`` path (the ``reference_x64``
+  engine) for all eight xfft transforms vs ``numpy.fft`` computed in
+  double; the gate is max error ≤ 1e-10, the ISSUE-5 acceptance bound.
+
+  PYTHONPATH=src python benchmarks/accuracy.py --out /tmp/BENCH_precision.json
+  PYTHONPATH=src python -m benchmarks.run accuracy
+"""
 
 from __future__ import annotations
+
+import argparse
+import json
+import sys
 
 import jax.numpy as jnp
 import numpy as np
 
 import repro.xfft as xfft
-from benchmarks.common import emit
-from repro.kernels.ops import fft_kernel, fft_staged
+from repro.engines import iter_engines
+from repro.plan import problem_key
+
+try:  # python -m benchmarks.accuracy (repo root on sys.path)
+    from benchmarks.common import emit
+except ImportError:  # python benchmarks/accuracy.py (script dir on sys.path)
+    from common import emit
+
+DOUBLE_TOL = 1e-10
 
 
-def run():
-    print("# Engine accuracy vs float64 DFT (max relative error)")
+def single_precision_errors(sizes=(64, 1024, 4096)) -> dict:
+    """Max relative error of each single-precision engine's 1D forward
+    transform vs the float64 DFT oracle."""
     rng = np.random.default_rng(0)
-    for n in (64, 1024, 4096):
+    out: dict = {}
+    for n in sizes:
         x = (rng.standard_normal((8, n)) + 1j * rng.standard_normal((8, n))).astype(
             np.complex64
         )
         ref = np.fft.fft(x.astype(np.complex128))
         scale = np.max(np.abs(ref))
-        for variant in ("looped", "unrolled", "stockham"):
-            with xfft.config(variant=variant):
+        key = problem_key("fft1d", (8, n))
+        for spec in iter_engines(kind="fft1d", precision="single"):
+            if not spec.supports(key):
+                continue
+            with xfft.config(variant=spec.name):
                 got = np.asarray(xfft.fft(jnp.asarray(x)))
             err = float(np.max(np.abs(got - ref)) / scale)
-            emit(f"accuracy_{variant}_N{n}", 0.0, f"max_rel_err={err:.2e}")
-        for name, fn in (
-            ("kernel_fused", lambda v: fft_kernel(v, interpret=True)),
-            ("kernel_staged", lambda v: fft_staged(v, interpret=True)),
-        ):
-            got = np.asarray(fn(jnp.asarray(x)))
-            err = float(np.max(np.abs(got - ref)) / scale)
-            emit(f"accuracy_{name}_N{n}", 0.0, f"max_rel_err={err:.2e}")
+            out.setdefault(spec.name, {})[str(n)] = err
+            emit(f"accuracy_{spec.name}_N{n}", 0.0, f"max_rel_err={err:.2e}")
+    return out
+
+
+def double_precision_errors() -> dict:
+    """Max scaled error of all eight transforms under precision="double"
+    vs numpy.fft in double — the registered x64 engine end to end."""
+    rng = np.random.default_rng(1)
+    z1 = (rng.standard_normal((3, 64)) + 1j * rng.standard_normal((3, 64))).astype(
+        np.complex64
+    )
+    z2 = (rng.standard_normal((2, 32, 32))
+          + 1j * rng.standard_normal((2, 32, 32))).astype(np.complex64)
+    x1 = rng.standard_normal((3, 64)).astype(np.float32)
+    x2 = rng.standard_normal((2, 32, 32)).astype(np.float32)
+    h1 = np.fft.rfft(x1).astype(np.complex64)
+    h2 = np.fft.rfft2(x2).astype(np.complex64)
+
+    def err(got, ref):
+        got, ref = np.asarray(got), np.asarray(ref)
+        return float(np.max(np.abs(got - ref)) / max(1.0, np.max(np.abs(ref))))
+
+    with xfft.config(precision="double"):
+        errors = {
+            "fft": err(xfft.fft(z1), np.fft.fft(z1.astype(np.complex128))),
+            "ifft": err(xfft.ifft(z1), np.fft.ifft(z1.astype(np.complex128))),
+            "fft2": err(xfft.fft2(z2), np.fft.fft2(z2.astype(np.complex128))),
+            "ifft2": err(xfft.ifft2(z2), np.fft.ifft2(z2.astype(np.complex128))),
+            "rfft": err(xfft.rfft(x1), np.fft.rfft(x1.astype(np.float64))),
+            "irfft": err(xfft.irfft(h1), np.fft.irfft(h1.astype(np.complex128))),
+            "rfft2": err(xfft.rfft2(x2), np.fft.rfft2(x2.astype(np.float64))),
+            "irfft2": err(xfft.irfft2(h2),
+                          np.fft.irfft2(h2.astype(np.complex128))),
+        }
+    for name, e in errors.items():
+        emit(f"accuracy_double_{name}", 0.0, f"max_err={e:.2e}")
+    return errors
+
+
+def build_report(sizes=(64, 1024, 4096)) -> dict:
+    import jax
+
+    single = single_precision_errors(sizes)
+    double = double_precision_errors()
+    return {
+        "backend": jax.default_backend(),
+        "sizes": list(sizes),
+        "single": single,
+        "double": double,
+        "double_tol": DOUBLE_TOL,
+        "ok": all(e <= DOUBLE_TOL for e in double.values()),
+    }
+
+
+def run():
+    """benchmarks.run entry point: print the report (small size sweep)."""
+    print("# Engine accuracy vs float64 references")
+    report = build_report(sizes=(64, 1024))
+    print(json.dumps(report, indent=2))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="64,1024,4096",
+                    help="comma-separated 1D sizes for the single sweep")
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    args = ap.parse_args(argv)
+    sizes = tuple(int(s) for s in args.sizes.split(",") if s)
+    report = build_report(sizes=sizes)
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0 if report["ok"] else 1
 
 
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.xfft as xfft
-from repro.plan import PLAN_VARIANTS, plan_fft
+from repro.plan import plan_fft, problem_key, variant_candidates
 
 try:  # python -m benchmarks.plan_autotune (repo root on sys.path)
     from benchmarks.common import time_fn
@@ -47,7 +47,9 @@ def bench_size(n: int, cache, mode: str) -> dict:
     iters = _iters_for(n)
 
     fixed_us = {}
-    for v in PLAN_VARIANTS:
+    # The candidate set comes from the engine registry, capability-filtered
+    # for this very problem — new registrations join the sweep automatically.
+    for v in variant_candidates(problem_key("fft2d", (n, n))):
         # A scoped config override pins the engine (applied at trace time).
         def run(arr, _v=v):
             with xfft.config(variant=_v):

@@ -48,6 +48,12 @@ Variant = Literal[
     "looped", "unrolled", "stockham", "radix4", "fused", "fused_r4", "auto"
 ]
 
+#: Variants this module's dispatch chains terminate on. Any OTHER name is
+#: looked up in the ``repro.engines`` registry and delegated wholesale to
+#: that engine's executor (before any complex64 cast — a registered engine
+#: owns its own dtype policy, e.g. ``reference_x64`` computes in c128).
+BUILTIN_VARIANTS = ("looped", "unrolled", "stockham", "radix4", "fused", "fused_r4")
+
 __all__ = [
     "fft",
     "ifft",
@@ -281,21 +287,28 @@ def fft_impl(x: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Arr
     (cached MEASURE plan if one was tuned for this shape, analytic
     ESTIMATE else, scoped ``repro.xfft.config`` overrides applied).
     """
+    orig = x
     x = jnp.asarray(x)
-    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
-        x = x.astype(jnp.complex64)
-    elif x.dtype != jnp.complex64:
-        x = x.astype(jnp.complex64)
     user_axis = axis
     axis = canonical_axis(axis, x.ndim)
     _check_pow2(x.shape[axis], axis=user_axis)
-    if axis != x.ndim - 1:
-        x = jnp.moveaxis(x, axis, -1)
-    n = x.shape[-1]
     if variant == "auto":
         from repro.plan.api import resolve  # lazy: plan imports core
 
-        variant = resolve("fft1d", x.shape).variant
+        key_shape = x.shape[:axis] + x.shape[axis + 1:] + (x.shape[axis],)
+        variant = resolve("fft1d", key_shape).variant
+    if variant not in BUILTIN_VARIANTS:
+        # Registry fallback gets the caller's ORIGINAL array: the engine
+        # owns every jnp touch (an x64 engine must asarray/moveaxis inside
+        # its enable_x64 scope or 64-bit input is truncated to 32).
+        from repro.engines import apply_engine
+
+        return apply_engine(variant, "fft1d", orig, axis=axis)
+    if x.dtype != jnp.complex64:
+        x = x.astype(jnp.complex64)
+    if axis != x.ndim - 1:
+        x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
     if variant == "looped":
         y = _fft_looped(x, n)
     elif variant == "unrolled":
@@ -304,12 +317,10 @@ def fft_impl(x: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Arr
         y = _fft_stockham(x, n)
     elif variant == "radix4":
         y = _fft_radix4(x, n)
-    elif variant in ("fused", "fused_r4"):
+    else:  # fused / fused_r4
         from repro.kernels.ops import fft_kernel  # lazy: kernels import core
 
         y = fft_kernel(x, radix=4 if variant == "fused_r4" else 2)
-    else:
-        raise ValueError(f"unknown variant {variant!r}")
     if axis != x.ndim - 1:
         y = jnp.moveaxis(y, -1, axis)
     return y
@@ -317,7 +328,8 @@ def fft_impl(x: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Arr
 
 def ifft_impl(x: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Array:
     """Inverse FFT via the conjugation identity (shares the forward engine)."""
-    x = jnp.asarray(x).astype(jnp.complex64)
+    orig = x
+    x = jnp.asarray(x)
     axis_n = canonical_axis(axis, x.ndim)
     n = x.shape[axis_n]
     if variant == "auto":
@@ -328,6 +340,11 @@ def ifft_impl(x: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Ar
         # shape (transform axis last), matching the forward convention.
         key_shape = x.shape[:axis_n] + x.shape[axis_n + 1:] + (n,)
         variant = resolve("fft1d", key_shape, direction="inv").variant
+    if variant not in BUILTIN_VARIANTS:
+        from repro.engines import apply_engine  # lazy: registry fallback
+
+        return apply_engine(variant, "fft1d", orig, direction="inv", axis=axis_n)
+    x = x.astype(jnp.complex64)
     return jnp.conj(fft_impl(jnp.conj(x), axis=axis, variant=variant)) / n
 
 

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core._deprecation import warn_deprecated
-from repro.core.fft1d import Variant, fft_impl, ifft_impl
+from repro.core.fft1d import BUILTIN_VARIANTS, Variant, fft_impl, ifft_impl
 
 __all__ = ["fft2", "ifft2", "fft2_stream", "fftshift2", "ifftshift2"]
 
@@ -45,6 +45,11 @@ def fft2_impl(x: jax.Array, variant: Variant = "auto") -> jax.Array:
         # Whole-frame VMEM residency (with built-in failover to an unfused
         # row/turn/column composition when the frame exceeds the budget).
         return fft2_kernel(x, radix=4 if variant == "fused_r4" else 2)
+    if variant not in BUILTIN_VARIANTS:
+        # The engine owns every jnp touch (see repro.engines.apply_engine).
+        from repro.engines import apply_engine
+
+        return apply_engine(variant, "fft2d", x)
     y = fft_impl(x, axis=-1, variant=variant)   # first 1D FFT block (rows)
     return fft_impl(y, axis=-2, variant=variant)  # second 1D FFT block (columns)
 
@@ -57,6 +62,10 @@ def ifft2_impl(x: jax.Array, variant: Variant = "auto") -> jax.Array:
         x = jnp.asarray(x)
         h, w = x.shape[-2], x.shape[-1]
         return jnp.conj(fft2_impl(jnp.conj(x), variant=variant)) / (h * w)
+    if variant not in BUILTIN_VARIANTS:
+        from repro.engines import apply_engine  # lazy: registry fallback
+
+        return apply_engine(variant, "fft2d", x, direction="inv")
     y = ifft_impl(x, axis=-1, variant=variant)
     return ifft_impl(y, axis=-2, variant=variant)
 
@@ -126,6 +135,12 @@ def fft2_stream(
             variant = plan.variant
         if unroll == "auto":
             unroll = plan.unroll
+    if variant not in BUILTIN_VARIANTS:
+        # A registered engine (e.g. reference_x64) runs its own stream op
+        # — the scan carry must share the engine's compute dtype.
+        from repro.engines import apply_engine
+
+        return apply_engine(variant, "fft2d_stream", frames)
     if not jnp.issubdtype(frames.dtype, jnp.complexfloating):
         frames = frames.astype(jnp.complex64)
 

@@ -29,18 +29,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.core._deprecation import warn_deprecated
-from repro.core.fft1d import Variant, _check_pow2, fft_impl, ifft_impl
+from repro.core.fft1d import (
+    BUILTIN_VARIANTS,
+    Variant,
+    _check_pow2,
+    fft_impl,
+    ifft_impl,
+)
 
 __all__ = ["rfft", "irfft", "rfft2", "irfft2"]
 
 _FUSED = ("fused", "fused_r4")
 
 
-def _check_real(x: jax.Array, name: str) -> jax.Array:
+def _ensure_real(x: jax.Array, name: str) -> jax.Array:
+    """Validate real input WITHOUT touching its dtype (the engine — or the
+    precision-aware xfft front door — owns the float width)."""
     x = jnp.asarray(x)
     if jnp.issubdtype(x.dtype, jnp.complexfloating):
         raise TypeError(f"{name} expects real input; use fft/fft2 for complex")
-    return x.astype(jnp.float32)
+    return x
 
 
 def _resolve(kind: str, shape, variant: Variant, direction: str = "fwd") -> Variant:
@@ -89,15 +97,24 @@ def _irfft_jnp(y: jax.Array, n: int, variant: Variant) -> jax.Array:
 
 def rfft_impl(x: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Array:
     """Real-input FFT along ``axis`` -> non-redundant half spectrum
-    (..., N/2+1) complex64. N must be a power of two >= 2."""
-    x = _check_real(x, "rfft")
+    (..., N/2+1) complex. N must be a power of two >= 2."""
+    orig = x
+    x = _ensure_real(x, "rfft")
     user_axis = axis
     axis = axis % x.ndim
+    n = x.shape[axis]
+    _check_pow2(n, axis=user_axis)
+    key_shape = x.shape[:axis] + x.shape[axis + 1:] + (n,)
+    variant = _resolve("rfft1d", key_shape, variant)
+    if variant not in BUILTIN_VARIANTS:
+        # Registry fallback gets the caller's ORIGINAL array (an x64
+        # engine must do its own asarray/moveaxis inside enable_x64).
+        from repro.engines import apply_engine
+
+        return apply_engine(variant, "rfft1d", orig, axis=axis)
+    x = x.astype(jnp.float32)
     if axis != x.ndim - 1:
         x = jnp.moveaxis(x, axis, -1)
-    n = x.shape[-1]
-    _check_pow2(n, axis=user_axis)
-    variant = _resolve("rfft1d", x.shape, variant)
     if variant in _FUSED:
         from repro.kernels.ops import rfft_kernel  # lazy: kernels import core
 
@@ -111,18 +128,25 @@ def rfft_impl(x: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Ar
 
 def irfft_impl(y: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.Array:
     """Inverse of :func:`rfft_impl`: (..., N/2+1) half spectrum -> real (..., N)."""
-    y = jnp.asarray(y).astype(jnp.complex64)
+    orig = y
+    y = jnp.asarray(y)
     user_axis = axis
     axis = axis % y.ndim
-    if axis != y.ndim - 1:
-        y = jnp.moveaxis(y, axis, -1)
-    n = 2 * (y.shape[-1] - 1)
+    n = 2 * (y.shape[axis] - 1)
     if n < 2 or n & (n - 1):
         raise ValueError(
-            f"axis {user_axis} has a half spectrum of width {y.shape[-1]}; "
+            f"axis {user_axis} has a half spectrum of width {y.shape[axis]}; "
             "irfft requires width N/2+1 with N a power of two"
         )
-    variant = _resolve("rfft1d", y.shape[:-1] + (n,), variant, direction="inv")
+    key_shape = y.shape[:axis] + y.shape[axis + 1:] + (n,)
+    variant = _resolve("rfft1d", key_shape, variant, direction="inv")
+    if variant not in BUILTIN_VARIANTS:
+        from repro.engines import apply_engine  # lazy: registry fallback
+
+        return apply_engine(variant, "rfft1d", orig, direction="inv", axis=axis)
+    y = y.astype(jnp.complex64)
+    if axis != y.ndim - 1:
+        y = jnp.moveaxis(y, axis, -1)
     if variant in _FUSED:
         from repro.kernels.ops import irfft_kernel  # lazy: kernels import core
 
@@ -136,9 +160,15 @@ def irfft_impl(y: jax.Array, axis: int = -1, variant: Variant = "auto") -> jax.A
 
 def rfft2_impl(x: jax.Array, variant: Variant = "auto") -> jax.Array:
     """2D real-input FFT over the last two axes: row rfft then full column
-    FFT -> (..., H, W/2+1) complex64."""
-    x = _check_real(x, "rfft2")
+    FFT -> (..., H, W/2+1) complex."""
+    orig = x
+    x = _ensure_real(x, "rfft2")
     variant = _resolve("rfft2d", x.shape, variant)
+    if variant not in BUILTIN_VARIANTS:
+        from repro.engines import apply_engine  # lazy: registry fallback
+
+        return apply_engine(variant, "rfft2d", orig)
+    x = x.astype(jnp.float32)
     if variant in _FUSED:
         from repro.kernels.ops import rfft2_kernel  # lazy: kernels import core
 
@@ -149,10 +179,16 @@ def rfft2_impl(x: jax.Array, variant: Variant = "auto") -> jax.Array:
 
 def irfft2_impl(y: jax.Array, variant: Variant = "auto") -> jax.Array:
     """Inverse of :func:`rfft2_impl`: (..., H, W/2+1) -> real (..., H, W)."""
-    y = jnp.asarray(y).astype(jnp.complex64)
+    orig = y
+    y = jnp.asarray(y)
     half = y.shape[-1]
     w = 2 * (half - 1)
     variant = _resolve("rfft2d", y.shape[:-1] + (w,), variant, direction="inv")
+    if variant not in BUILTIN_VARIANTS:
+        from repro.engines import apply_engine  # lazy: registry fallback
+
+        return apply_engine(variant, "rfft2d", orig, direction="inv")
+    y = y.astype(jnp.complex64)
     if variant in _FUSED:
         from repro.kernels.ops import irfft2_kernel  # lazy: kernels import core
 

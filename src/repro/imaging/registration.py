@@ -54,8 +54,8 @@ def _upsampled_peak(r_full: jax.Array, coarse: jax.Array, upsample: int):
     region = int(math.ceil(1.5 * upsample))
     centre = region // 2
     grid = (jnp.arange(region, dtype=jnp.float32) - centre) / upsample
-    fy = jnp.asarray(jnp.fft.fftfreq(h), dtype=jnp.float32)   # cycles/sample
-    fx = jnp.asarray(jnp.fft.fftfreq(w), dtype=jnp.float32)
+    fy = xfft.fftfreq(h, dtype=jnp.float32)                   # cycles/sample
+    fx = xfft.fftfreq(w, dtype=jnp.float32)
     # Per-item sample positions around the coarse peak (broadcast batch).
     ys = coarse[..., 0:1] + grid                              # (..., region)
     xs = coarse[..., 1:2] + grid
@@ -133,11 +133,11 @@ def apply_shift(x: jax.Array, shift) -> jax.Array:
     h, w = x.shape[-2], x.shape[-1]
     dy = shift[..., 0][..., None, None]
     dx = shift[..., 1][..., None, None]
-    fy = jnp.asarray(jnp.fft.fftfreq(h), dtype=jnp.float32)[:, None]
+    fy = xfft.fftfreq(h, dtype=jnp.float32)[:, None]
     if _is_real(x):
-        fx = jnp.asarray(jnp.fft.rfftfreq(w), dtype=jnp.float32)[None, :]
+        fx = xfft.rfftfreq(w, dtype=jnp.float32)[None, :]
         ramp = jnp.exp(-2j * math.pi * (fy * dy + fx * dx))
         return xfft.irfft2(xfft.rfft2(x) * ramp).astype(x.dtype)
-    fx = jnp.asarray(jnp.fft.fftfreq(w), dtype=jnp.float32)[None, :]
+    fx = xfft.fftfreq(w, dtype=jnp.float32)[None, :]
     ramp = jnp.exp(-2j * math.pi * (fy * dy + fx * dx))
     return xfft.ifft2(xfft.fft2(x) * ramp)

@@ -3,8 +3,12 @@
 One generator, one definition: the band-limited random frame that makes
 subpixel registration well posed (a Gaussian-windowed white spectrum).
 Tests, benchmarks and examples all import it from here so the fixture
-can never drift between them. Pure numpy on purpose — generating inputs
-must not touch the engine under test.
+can never drift between them. The spectral shaping runs in numpy on
+purpose — generating inputs must not exercise the transform engines
+under test — but the frequency grid comes from :func:`repro.xfft.fftfreq`
+(pure index arithmetic, no engine), the one definition the rest of the
+stack uses, with its dtype PINNED so the fixture stays bit-identical
+whatever ``xfft.config(precision=...)`` scope happens to be active.
 """
 
 from __future__ import annotations
@@ -22,10 +26,17 @@ def band_limited_frame(n: int, seed: int, bandwidth: float = 0.05) -> np.ndarray
     little enough high frequency that fractional shifts interpolate
     cleanly.
     """
+    import jax.numpy as jnp
+
+    from repro import xfft  # lazy: keep fixture generation import-light
+
     rng = np.random.default_rng(seed)
     spectrum = np.fft.fft2(rng.standard_normal((n, n)))
-    ky = np.fft.fftfreq(n)[:, None]
-    kx = np.fft.fftfreq(n)[None, :]
+    # dtype pinned: an ambient precision="double" scope must not change
+    # the grid (and therefore the fixture) between test environments.
+    freqs = np.asarray(xfft.fftfreq(n, dtype=jnp.float32), dtype=np.float64)
+    ky = freqs[:, None]
+    kx = freqs[None, :]
     spectrum *= np.exp(-(ky**2 + kx**2) / (2 * bandwidth**2))
     frame = np.real(np.fft.ifft2(spectrum))
     return (frame / np.abs(frame).max()).astype(np.float32)

@@ -20,11 +20,22 @@ from repro.plan.plan import (
     KINDS,
     NORMS,
     PLAN_SCHEMA_VERSION,
-    PLAN_VARIANTS,
+    PRECISIONS,
     FFTPlan,
     ProblemKey,
     problem_key,
 )
+
+
+def __getattr__(name: str):
+    # Deprecation alias (see repro.plan.plan.__getattr__): the engine list
+    # lives in the repro.engines registry now; this stays importable for
+    # pre-registry callers and always reflects the live registry.
+    if name == "PLAN_VARIANTS":
+        from repro.plan.plan import PLAN_VARIANTS
+
+        return PLAN_VARIANTS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "FFTPlan",
@@ -35,6 +46,7 @@ __all__ = [
     "NORMS",
     "PLAN_SCHEMA_VERSION",
     "PLAN_VARIANTS",
+    "PRECISIONS",
     "chunk_candidates",
     "default_cache",
     "estimate_plan",

@@ -42,6 +42,8 @@ def plan_fft(
     timings_out: Optional[Dict[str, float]] = None,
     direction: str = "fwd",
     axes: Optional[Tuple[int, ...]] = None,
+    precision: str = "single",
+    backends: Tuple[str, ...] = (),
 ) -> FFTPlan:
     """Plan one FFT problem; consult the cache first unless ``force``.
 
@@ -56,11 +58,14 @@ def plan_fft(
     own cache key (forward wisdom never cross-contaminates it). ``axes``
     is part of the key too; the ``norm`` convention is not — it is applied
     as a scale outside the engine, so all conventions share one entry.
+    ``precision`` and ``backends`` restrict which registered engines the
+    planner may consider (``repro.engines``) and are part of the key.
     """
     if mode not in ("estimate", "measure"):
         raise ValueError(f"mode must be 'estimate' or 'measure', got {mode!r}")
     cache = cache if cache is not None else default_cache()
-    key = problem_key(kind, shape, dtype, n_devices, direction, axes)
+    key = problem_key(kind, shape, dtype, n_devices, direction, axes,
+                      precision, backends)
     # Pencil problems can't be timed without a live mesh, and oaconv2d tile
     # selection is a closed-form working-set/efficiency trade-off: the best
     # we can do is the analytic model, so a cached ESTIMATE plan already is
@@ -158,7 +163,11 @@ def resolve_call(
 
     1. The active :func:`repro.xfft.config` scope supplies defaults: its
        ``cache_dir`` selects the wisdom cache (else the process-wide
-       default cache), its ``mode`` decides what a cache miss costs.
+       default cache), its ``mode`` decides what a cache miss costs, and
+       its ``precision``/``backend`` constraints become part of the
+       problem key — the planner then only considers registered engines
+       (``repro.engines``) capable of that precision on those backends,
+       and wisdom tuned under one constraint set never serves another.
     2. Cache hit -> the cached (possibly MEASURE) plan. Miss -> ESTIMATE,
        which is pure Python on analytic counts and therefore safe while
        JAX is tracing the surrounding computation. ``mode="measure"``
@@ -172,7 +181,8 @@ def resolve_call(
     cfg = _active_config()
     if cache is None:
         cache = _cache_for_dir(cfg.cache_dir) if cfg.cache_dir else default_cache()
-    key = problem_key(kind, shape, dtype, n_devices, direction, axes)
+    key = problem_key(kind, shape, dtype, n_devices, direction, axes,
+                      cfg.precision, cfg.backends)
     mode = mode if mode is not None else cfg.mode
     plan = cache.get(key)
     # A forced variant discards the planner's pick, so never pay a timed
@@ -193,12 +203,13 @@ def resolve_call(
         # measured into the same file after we loaded it (it would also put
         # file I/O inside jit traces). Only MEASURE results earn a write.
         plan = cache.put(estimate_plan(key))
-    overrides = {}
     if cfg.variant is not None and cfg.variant != plan.variant:
-        overrides.update(variant=cfg.variant, mode="forced", measured_us=None)
-    if cfg.precision != plan.precision:
-        overrides["precision"] = cfg.precision
-    return dataclasses.replace(plan, **overrides) if overrides else plan
+        # The key (and therefore plan.precision) already carries the scoped
+        # precision; only the engine choice itself can be forced.
+        return dataclasses.replace(
+            plan, variant=cfg.variant, mode="forced", measured_us=None
+        )
+    return plan
 
 
 def resolve(

@@ -1,10 +1,12 @@
 """FFTW-style planning modes: analytic ESTIMATE and timed MEASURE.
 
-ESTIMATE builds a roofline model per candidate schedule from the paper's
-analytic resource counts (``butterfly_counts``: (N/2)·log2 N butterfly
-passes) plus per-variant memory-traffic factors, and adds small
-per-stage dispatch overheads that differentiate the schedules where the
-roofline terms tie:
+Candidates come from the ``repro.engines`` registry (capability-filtered
+per problem key); ESTIMATE builds a roofline model per candidate from the
+paper's analytic resource counts (``butterfly_counts``: (N/2)·log2 N
+butterfly passes) plus each engine's registered cost hints
+(``repro.engines.CostHints``: memory-traffic factor, per-stage dispatch
+overhead, FLOP scale, fixed entry cost), which differentiate the
+schedules where the roofline terms tie:
 
   * ``looped``   — fori_loop stages run strictly sequentially and each
                    stage is a gather/concat/gather round-trip.
@@ -60,38 +62,6 @@ __all__ = [
 # add/sub (4) — the multiplier + 2 adders of the paper's butterfly unit.
 _FLOPS_PER_BUTTERFLY = 10.0
 
-# Radix-4 4-point butterflies: 3 complex multiplies + 8 add/sub per 4
-# outputs over 2 merged stages = 34 flops vs the radix-2 pair's 40.
-_RADIX4_FLOP_SCALE = 0.85
-
-# Bytes of HBM traffic per element per stage pass (complex64 = 8 B).
-# looped/unrolled: gather a, gather b, write top/bot concat, gather unperm
-# write-back -> ~6 element-touches; stockham: read + twiddle-mul + two
-# contiguous writes -> ~4 (radix4 pays the same per pass but runs half
-# the passes); fused: one read + one write for the whole transform.
-_TRAFFIC_FACTOR = {
-    "looped": 6.0,
-    "unrolled": 6.0,
-    "stockham": 4.0,
-    "radix4": 4.0,
-    "fused": 4.0,
-    "fused_r4": 4.0,
-}
-
-# Per-stage dispatch overhead (seconds): sequential fori_loop iterations
-# cannot fuse; unrolled fuses best; stockham pays for reshape/concat.
-_STAGE_OVERHEAD_S = {
-    "looped": 3.0e-6,
-    "unrolled": 0.5e-6,
-    "stockham": 0.8e-6,
-    "radix4": 0.8e-6,
-    "fused": 0.8e-6,
-    "fused_r4": 0.8e-6,
-}
-
-# Fixed cost of entering a fori_loop with carried state (the register array).
-_LOOP_ENTRY_S = 5.0e-6
-
 # Fixed cost of a Pallas kernel launch; in interpret mode (non-TPU) the
 # kernel body is traced into XLA, costing grid bookkeeping on top.
 _KERNEL_LAUNCH_S = 2.0e-6
@@ -101,46 +71,31 @@ _INTERPRET_OVERHEAD_S = 20.0e-6
 # matters for planning, but scaling keeps est_time_s roughly honest.
 _BACKEND_SLOWDOWN = {"cpu": 40.0}
 
-#: Variants that run the transform as a single fused Pallas kernel.
-FUSED_VARIANTS = ("fused", "fused_r4")
-
-#: Kinds whose entry points can dispatch to the fused kernels.
-_FUSED_KINDS = ("fft1d", "fft2d", "rfft1d", "rfft2d")
-
 #: Real-input (two-for-one) kinds.
 _REAL_KINDS = ("rfft1d", "rfft2d")
 
 
-def _pow2(v: int) -> bool:
-    return v >= 2 and (v & (v - 1)) == 0
-
-
 def variant_candidates(key: ProblemKey) -> Tuple[str, ...]:
-    """Concrete schedules the planner may legally consider for ``key``.
+    """Engines the planner may legally consider for ``key``.
 
-    Every kind sweeps the four jnp engines; the fused Pallas kernels join
-    for the kinds whose entry points dispatch to them (1D/2D, complex and
-    real) when the transform dims are powers of two, the problem is
-    single-device, and a 1D row tile can fit VMEM at all (the 2D kernels
-    have an unfused failover; the 1D ones refuse rows that cannot tile).
+    An enumeration of the ``repro.engines`` registry filtered by
+    capability: problem kind × precision × scoped backend restriction ×
+    device count × VMEM working-set fit (each engine's own
+    ``EngineSpec.supports``). Per-engine cost tables, fused-kind lists and
+    pow2/VMEM gates all live on the specs now — registering an engine is
+    enough to enter every sweep.
     """
-    base = ("looped", "unrolled", "stockham", "radix4")
-    if key.kind not in _FUSED_KINDS or key.n_devices != 1:
-        return base
-    shape = key.shape
-    if key.kind in ("fft2d", "rfft2d"):
-        if len(shape) < 2:
-            return base
-        dims = shape[-2:]
-    else:
-        dims = shape[-1:]
-    if not all(_pow2(d) for d in dims):
-        return base
-    from repro.kernels.fft_radix2 import fft_fits_vmem  # lazy: pallas import
+    from repro.engines import iter_engines  # lazy: engines is the leaf layer
 
-    if not all(fft_fits_vmem(d) for d in dims):
-        return base
-    return base + FUSED_VARIANTS
+    names = tuple(s.name for s in iter_engines() if s.supports(key))
+    if not names:
+        scope = f" under backend scope {key.backends}" if key.backends else ""
+        raise ValueError(
+            f"no registered engine supports kind {key.kind!r} at precision "
+            f"{key.precision!r}{scope}; registered engines: "
+            f"{tuple(s.name for s in iter_engines())}"
+        )
+    return names
 
 
 def _transform_geometry(key: ProblemKey) -> Tuple[int, int, int]:
@@ -163,26 +118,36 @@ def _transform_geometry(key: ProblemKey) -> Tuple[int, int, int]:
     return n, h, max(lead, 1) * (h + w)
 
 
-def _stage_passes(stages: int, variant: str) -> int:
-    """Butterfly passes over the data under ``variant``'s radix."""
-    if variant in ("radix4", "fused_r4"):
-        return max(1, math.ceil(stages / 2))
-    return stages
+def _stage_passes(stages: int, radix: int) -> int:
+    """Butterfly passes over the data at the engine's ``radix``."""
+    if radix <= 2:
+        return stages
+    return max(1, math.ceil(stages / math.log2(radix)))
 
 
 def estimate_variant_time(key: ProblemKey, variant: str) -> float:
-    """Roofline-model execution time (seconds) of one call under ``variant``."""
+    """Roofline-model execution time (seconds) of one call under ``variant``.
+
+    All per-engine coefficients — traffic factor, per-stage overhead, FLOP
+    scale, fixed entry cost, radix, fusion — come from the engine's
+    registered :class:`repro.engines.CostHints`, so a new registration is
+    rankable by ESTIMATE without touching this function.
+    """
+    from repro.engines import get_engine  # lazy: engines is the leaf layer
+
+    spec = get_engine(variant)
     n, _, n_transforms = _transform_geometry(key)
     counts = butterfly_counts(n, proposed=True)
     stages = counts["stages"]
-    passes = _stage_passes(stages, variant)
+    passes = _stage_passes(stages, spec.radix)
     # (N/2)·log2 N butterfly passes per transform (paper Tables 1 & 2).
     flops = _FLOPS_PER_BUTTERFLY * counts["butterfly_units"] * stages * n_transforms
-    if variant in ("radix4", "fused_r4"):
-        flops *= _RADIX4_FLOP_SCALE
-    fused = variant in FUSED_VARIANTS
+    flops *= spec.cost.flop_scale
+    # Bytes per element: re+im at the key's precision (f32 pairs = 8 B,
+    # f64 pairs = 16 B — the double path moves twice the traffic).
+    elem_bytes = 16.0 if key.precision == "double" else 8.0
     on_tpu = key.backend == "tpu"
-    if fused and on_tpu:
+    if spec.fused and on_tpu:
         # Whole transform on one VMEM residency: one HBM read + one write.
         # Frames over the VMEM budget take the unfused row/turn/column
         # failover instead — three round trips, not one.
@@ -193,11 +158,11 @@ def estimate_variant_time(key: ProblemKey, variant: str) -> float:
             arrays = 6 if key.kind == "rfft2d" else 8
             if not fft2_fits_vmem(key.shape[-2], key.shape[-1], arrays=arrays):
                 trips = 3
-        traffic = _TRAFFIC_FACTOR[variant] * 8.0 * n * trips * n_transforms
+        traffic = spec.cost.traffic_factor * elem_bytes * n * trips * n_transforms
     else:
         # jnp engines — and fused kernels in interpret mode, which execute
         # as plain XLA ops and get no HBM fusion win.
-        traffic = _TRAFFIC_FACTOR[variant] * 8.0 * n * passes * n_transforms
+        traffic = spec.cost.traffic_factor * elem_bytes * n * passes * n_transforms
     if key.kind in _REAL_KINDS:
         # Two-for-one Hermitian pack: one half-size transform, half the bytes.
         flops *= 0.5
@@ -205,7 +170,9 @@ def estimate_variant_time(key: ProblemKey, variant: str) -> float:
     # Pencil kind: the corner-turn moves each element once across the mesh.
     collective = 0.0
     if key.kind == "fft2d_pencil" and key.n_devices > 1:
-        collective = 8.0 * float(np.prod(key.shape, dtype=np.int64)) / key.n_devices
+        collective = (
+            elem_bytes * float(np.prod(key.shape, dtype=np.int64)) / key.n_devices
+        )
     rl = Roofline(
         flops_per_device=flops / key.n_devices,
         bytes_per_device=traffic / key.n_devices,
@@ -214,15 +181,13 @@ def estimate_variant_time(key: ProblemKey, variant: str) -> float:
         model_flops_global=flops,
     )
     t = rl.step_time_s * _BACKEND_SLOWDOWN.get(key.backend, 1.0)
-    if fused:
+    if spec.fused:
         t += _KERNEL_LAUNCH_S
         if not on_tpu:
-            t += _INTERPRET_OVERHEAD_S + passes * _STAGE_OVERHEAD_S[variant]
+            t += _INTERPRET_OVERHEAD_S + passes * spec.cost.stage_overhead_s
     else:
-        t += passes * _STAGE_OVERHEAD_S[variant]
-    if variant == "looped":
-        t += _LOOP_ENTRY_S
-    return t
+        t += passes * spec.cost.stage_overhead_s
+    return t + spec.cost.entry_overhead_s
 
 
 def chunk_candidates(w: int, n_devices: int, limit: int = 16) -> List[int]:
@@ -252,6 +217,7 @@ def _estimate_chunks(key: ProblemKey) -> int:
             shape=key.shape,
             dtype=key.dtype,
             n_devices=key.n_devices,
+            precision=key.precision,
         ),
         "stockham",
     )
@@ -333,6 +299,8 @@ def _estimate_oaconv_plan(key: ProblemKey) -> FFTPlan:
             shape=(th, tw),
             dtype=key.dtype,
             n_devices=key.n_devices,
+            precision=key.precision,
+            backends=key.backends,
         )
         times = {v: estimate_variant_time(sub, v) for v in variant_candidates(sub)}
         variant = min(times, key=times.get)
@@ -384,19 +352,26 @@ def _time_us(fn: Callable, x, warmup: int = 1, iters: int = 5) -> float:
 
 def _measure_input(key: ProblemKey, seed: int = 0):
     """A representative input for ``key``: real for rfft kinds, complex
-    else; inverse real kinds get the half spectrum their runner consumes."""
+    else, at the key's precision (a double-precision sweep must move
+    double-width bytes or its timings misrepresent the workload); inverse
+    real kinds get the half spectrum their runner consumes."""
     import jax.numpy as jnp
 
+    double = key.precision == "double"
+    rdt = np.float64 if double else np.float32
+    cdt = np.complex128 if double else np.complex64
     rng = np.random.default_rng(seed)
     if key.kind in _REAL_KINDS:
-        x = rng.standard_normal(key.shape).astype(np.float32)
+        x = rng.standard_normal(key.shape).astype(rdt)
         if key.direction == "inv":
-            x = np.fft.rfft2(x).astype(np.complex64) if key.kind == "rfft2d" \
-                else np.fft.rfft(x).astype(np.complex64)
-        return jnp.asarray(x)
-    x = (
-        rng.standard_normal(key.shape) + 1j * rng.standard_normal(key.shape)
-    ).astype(np.complex64)
+            x = np.fft.rfft2(x).astype(cdt) if key.kind == "rfft2d" \
+                else np.fft.rfft(x).astype(cdt)
+    else:
+        x = (
+            rng.standard_normal(key.shape) + 1j * rng.standard_normal(key.shape)
+        ).astype(cdt)
+    # measure_plan wraps double sweeps in enable_x64, so this asarray
+    # keeps the 64-bit width instead of canonicalizing it away.
     return jnp.asarray(x)
 
 
@@ -417,12 +392,17 @@ def _candidate_runners(key: ProblemKey) -> Dict[Tuple[str, int], Callable]:
         "rfft1d": irfft_impl if inv else rfft_impl,
         "rfft2d": irfft2_impl if inv else rfft2_impl,
     }
+    from repro.core.fft1d import BUILTIN_VARIANTS
+
     runners: Dict[Tuple[str, int], Callable] = {}
     for v in variant_candidates(key):
         if key.kind in entry:
             runners[(v, 1)] = jax.jit(functools.partial(entry[key.kind], variant=v))
         elif key.kind == "fft2d_stream":
-            for u in (1, 2):
+            # The scan-unroll knob only exists on the builtin jnp stream;
+            # registry engines run their own stream op and would time the
+            # identical computation twice under two labels.
+            for u in (1, 2) if v in BUILTIN_VARIANTS else (1,):
                 runners[(v, u)] = jax.jit(
                     functools.partial(fft2_stream, variant=v, unroll=u)
                 )
@@ -445,7 +425,23 @@ def measure_plan(
 
     ``timings_out`` (optional dict) receives per-candidate medians in µs,
     keyed ``"variant"`` or ``"variant/unroll=k"`` — benchmarks report it.
+    Double-precision keys sweep under ``jax.enable_x64`` so the timed
+    calls really trace and move 64-bit data.
     """
+    if key.precision == "double":
+        from jax.experimental import enable_x64  # lazy
+
+        with enable_x64():
+            return _measure_plan_impl(key, warmup, iters, timings_out)
+    return _measure_plan_impl(key, warmup, iters, timings_out)
+
+
+def _measure_plan_impl(
+    key: ProblemKey,
+    warmup: int,
+    iters: int,
+    timings_out: Optional[Dict[str, float]],
+) -> FFTPlan:
     x = _measure_input(key)
     best: Optional[Tuple[Tuple[str, int], float]] = None
     for (variant, unroll), fn in _candidate_runners(key).items():

@@ -31,7 +31,12 @@ from typing import Optional, Tuple
 #: v4 also adds the ``oaconv2d`` problem kind (overlap-save tiled 2D
 #: convolution) and the plan ``tile`` field it resolves; v3 wisdom keyed
 #: norm-per-entry is orphaned by the version prefix.
-PLAN_SCHEMA_VERSION = 4
+#: v5: engines became a registry (``repro.engines``) and the key gained the
+#: capability constraints resolution runs under — the numeric ``precision``
+#: ("single"/"double") and the scoped engine-``backends`` restriction — so
+#: wisdom tuned for one engine population can never be served to an
+#: incompatible one; v4 wisdom carries neither field and is orphaned.
+PLAN_SCHEMA_VERSION = 5
 
 #: Problem kinds the planner understands (r* = real-input two-for-one;
 #: oaconv2d = overlap-save tiled 2D convolution, whose shape convention is
@@ -42,10 +47,11 @@ KINDS = (
     "oaconv2d",
 )
 
-#: Concrete 1D schedules a plan may select (never "auto").
-#: radix4 = radix-4 Stockham (half the stages/twiddles); fused/fused_r4 =
-#: the Pallas whole-transform-in-VMEM kernels (radix-2/radix-4 panels).
-PLAN_VARIANTS = ("looped", "unrolled", "stockham", "radix4", "fused", "fused_r4")
+#: Numeric precisions a ProblemKey may carry ("single" = the paper's
+#: complex64 datapath, "double" = complex128 via an x64-capable engine).
+#: ONE source of truth: ``repro.engines.registry.PRECISIONS`` — re-exported
+#: here lazily (module ``__getattr__`` below) so key validation and engine
+#: registration can never disagree on the domain.
 
 #: Transform directions a ProblemKey may carry. Inverse transforms tune
 #: separately: their conjugation wrapper and 1/N scaling shift the optimum.
@@ -56,6 +62,11 @@ DIRECTIONS = ("fwd", "inv")
 #: norm as a scale outside the engine, so the schedule optimum cannot
 #: depend on it and all three conventions share one tuned entry.
 NORMS = ("backward", "ortho", "forward")
+
+#: Single-precision dtype labels and their double-precision widenings —
+#: ``ProblemKey.__post_init__`` maps a key's dtype through this whenever
+#: ``precision == "double"``.
+_WIDE_DTYPES = {"complex64": "complex128", "float32": "float64"}
 
 #: Canonical transform axes per kind — the axes every entry point moves the
 #: transform onto before keying (1D kinds transform the last axis, 2D kinds
@@ -89,6 +100,8 @@ class ProblemKey:
     n_devices: int = 1
     direction: str = "fwd"     # "fwd" | "inv" — inverse transforms tune apart
     axes: Tuple[int, ...] = () # transform axes; () -> canonical for the kind
+    precision: str = "single"  # "single" | "double" — engine-capability filter
+    backends: Tuple[str, ...] = ()  # engine-backend scope; () = unrestricted
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -97,18 +110,43 @@ class ProblemKey:
             raise ValueError(
                 f"unknown direction {self.direction!r}; want one of {DIRECTIONS}"
             )
+        from repro.engines.registry import PRECISIONS  # lazy: one domain
+
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; want one of {PRECISIONS}"
+            )
+        if self.precision == "double":
+            # Normalize the dtype label to the width a double-precision
+            # engine actually moves. Done HERE — the one place every key is
+            # born (resolve_call, plan_fft, direct construction) — so double
+            # wisdom can never split across callers that spelled the dtype
+            # at different widths.
+            object.__setattr__(
+                self, "dtype", _WIDE_DTYPES.get(str(self.dtype), str(self.dtype))
+            )
         object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
         axes = tuple(int(a) for a in self.axes) or _CANONICAL_AXES[self.kind]
         object.__setattr__(self, "axes", axes)
+        # Canonicalize the engine-backend scope (sorted, deduplicated) so
+        # config(backend=("pallas", "jnp")) and ("jnp", "pallas") share keys.
+        object.__setattr__(self, "backends", tuple(sorted(set(self.backends))))
 
     def cache_key(self) -> str:
-        """Stable, versioned string key for the plan cache."""
+        """Stable, versioned string key for the plan cache.
+
+        The engine-capability constraints — precision and any scoped
+        backend restriction — are part of the key: a plan tuned for one
+        engine population (say complex64 jnp+pallas) is never wisdom for
+        an incompatible one (complex128 x64, or a pallas-only scope).
+        """
         shape = "x".join(str(s) for s in self.shape)
         axes = ",".join(str(a) for a in self.axes)
+        engines = ",".join(self.backends) if self.backends else "*"
         return (
             f"v{PLAN_SCHEMA_VERSION}|{self.kind}|{self.direction}|{self.backend}"
             f"|{self.device_kind}|{shape}|{self.dtype}|d{self.n_devices}"
-            f"|ax{axes}"
+            f"|ax{axes}|{self.precision}|be{engines}"
         )
 
     def to_dict(self) -> dict:
@@ -121,6 +159,8 @@ class ProblemKey:
             "n_devices": self.n_devices,
             "direction": self.direction,
             "axes": list(self.axes),
+            "precision": self.precision,
+            "backends": list(self.backends),
         }
 
     @classmethod
@@ -134,6 +174,8 @@ class ProblemKey:
             n_devices=int(d["n_devices"]),
             direction=d.get("direction", "fwd"),
             axes=tuple(d.get("axes", ())),
+            precision=d.get("precision", "single"),
+            backends=tuple(d.get("backends", ())),
         )
 
 
@@ -147,7 +189,9 @@ class FFTPlan:
 
       axis_order  — pass order for separable 2D transforms; ``(-1, -2)``
                     is rows-then-columns (paper fig. 1).
-      precision   — accumulation dtype policy (the paper engine is c64).
+      precision   — numeric precision the plan resolves under ("single"
+                    = the paper's complex64 datapath, "double" = the x64
+                    engine family); mirrors ``key.precision``.
       unroll      — ``lax.scan`` unroll for the streaming pipeline.
       chunks      — corner-turn slab count for the overlapped pencil path.
       tile        — (TH, TW) FFT tile for ``oaconv2d`` plans: the largest
@@ -157,9 +201,9 @@ class FFTPlan:
     """
 
     key: ProblemKey
-    variant: str                       # concrete member of PLAN_VARIANTS
+    variant: str                       # name of a registered engine
     axis_order: Tuple[int, ...] = (-1, -2)
-    precision: str = "complex64"
+    precision: str = "single"
     unroll: int = 1
     chunks: int = 1
     mode: str = "estimate"             # "estimate" | "measure"
@@ -168,11 +212,17 @@ class FFTPlan:
     tile: Optional[Tuple[int, int]] = None  # oaconv2d FFT tile (TH, TW)
 
     def __post_init__(self):
-        if self.variant not in PLAN_VARIANTS:
+        from repro.engines import has_engine, registered_variants  # lazy
+
+        if not has_engine(self.variant):
+            # Name what IS registered, live — never a stale hardcoded tuple.
             raise ValueError(
-                f"plan variant must be concrete, got {self.variant!r} "
-                f"(want one of {PLAN_VARIANTS})"
+                f"plan variant must be a concrete registered engine, got "
+                f"{self.variant!r} (registered engines: {registered_variants()})"
             )
+        # precision is DERIVED state: always the key's, so no construction
+        # site can ever produce a double-keyed plan labeled "single".
+        object.__setattr__(self, "precision", self.key.precision)
         if self.unroll < 1 or self.chunks < 1:
             raise ValueError("unroll and chunks must be >= 1")
 
@@ -214,6 +264,8 @@ def problem_key(
     n_devices: int = 1,
     direction: str = "fwd",
     axes: Optional[Tuple[int, ...]] = None,
+    precision: str = "single",
+    backends: Tuple[str, ...] = (),
 ) -> ProblemKey:
     """Build a :class:`ProblemKey` for the *current* JAX backend/device.
 
@@ -221,6 +273,9 @@ def problem_key(
     last), which is what every entry point does before dispatching. The
     ``norm`` convention is deliberately absent: it is a post-engine scale,
     so all three conventions resolve to the same key (schema v4).
+    ``precision`` and ``backends`` are the engine-capability constraints
+    resolution runs under (schema v5); both come from the scoped
+    ``repro.xfft.config`` when resolution goes through ``resolve_call``.
     """
     import jax
 
@@ -234,4 +289,24 @@ def problem_key(
         n_devices=int(n_devices),
         direction=direction,
         axes=tuple(axes) if axes else (),
+        precision=precision,
+        backends=tuple(backends),
     )
+
+
+def __getattr__(name: str):
+    # Deprecation alias: the hardcoded engine tuple became the registry
+    # (``repro.engines``). Derived live so third-party registrations show
+    # up; restricted to single precision so pre-registry callers see
+    # exactly the engine population the old tuple named.
+    if name == "PLAN_VARIANTS":
+        from repro.engines import registered_variants
+
+        return registered_variants(precision="single")
+    # Lazy re-export: the precision domain lives on the engine registry
+    # (the leaf module) so registration and key validation share it.
+    if name == "PRECISIONS":
+        from repro.engines.registry import PRECISIONS
+
+        return PRECISIONS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -10,7 +10,10 @@
   and runs each group as a single batched transform. Real frames (every
   workload the paper names: imaging, holography, correlation) take the
   two-for-one ``rfft2`` path — half the arithmetic and HBM traffic of the
-  complex transform.
+  complex transform. Engine choice goes through the ``repro.engines``
+  registry via ``resolve_call``: a scoped ``xfft.config(precision=
+  "double")`` or ``config(backend=...)`` around ``serve()`` steers the
+  whole service (and its wisdom keys) without any API change here.
 """
 
 from __future__ import annotations

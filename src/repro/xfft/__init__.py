@@ -4,8 +4,13 @@ One namespace, eight transforms (`fft`/`ifft`, `fft2`/`ifft2`, `rfft`/
 `irfft`, `rfft2`/`irfft2`), N-D helpers (`fftn`/`ifftn` and the real-input
 `rfftn`/`irfftn`), shift utilities
 (`fftshift`/`ifftshift`, plus the 2D conveniences `fftshift2`/
-`ifftshift2`), `norm="backward"|"ortho"|"forward"` conventions and
-arbitrary `axes=` — all dispatched through ``repro.plan``.
+`ifftshift2`), sample-frequency grids (`fftfreq`/`rfftfreq`),
+`norm="backward"|"ortho"|"forward"` conventions and
+arbitrary `axes=` — all dispatched through ``repro.plan`` over the
+pluggable engine registry (``repro.engines``). `config(precision=
+"double")` routes every call through an x64-capable engine (complex128
+end to end); `config(backend=...)` restricts which engine backends the
+planner may consider.
 
 **The unified default.** Before this namespace existed, every entry point
 carried its own ``variant=`` kwarg with *inconsistent* defaults: ``fft``/
@@ -38,6 +43,7 @@ from repro.xfft._config import XFFTConfig, config, get_config
 from repro.xfft._transforms import (
     fft,
     fft2,
+    fftfreq,
     fftn,
     fftshift,
     fftshift2,
@@ -51,6 +57,7 @@ from repro.xfft._transforms import (
     irfftn,
     rfft,
     rfft2,
+    rfftfreq,
     rfftn,
 )
 
@@ -71,6 +78,8 @@ __all__ = [
     "ifftshift",
     "fftshift2",
     "ifftshift2",
+    "fftfreq",
+    "rfftfreq",
     "config",
     "get_config",
     "XFFTConfig",

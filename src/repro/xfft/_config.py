@@ -11,40 +11,63 @@ used as a context manager, restores the previous configuration on exit
     xfft.config(mode="measure")                 # process-wide from here on
     with xfft.config(variant="fused_r4"):       # only inside this block
         y = xfft.rfft2(x)
+    with xfft.config(precision="double"):       # complex128 end to end
+        y = xfft.fft2(x)                        # via the reference_x64 engine
+    with xfft.config(backend="jnp"):            # restrict planner candidates
+        y = xfft.fft2(x)
 
 Scoping is :mod:`contextvars`-based, so overrides nest, compose across
-``async`` task boundaries, and never leak between threads.
+``async`` task boundaries, and never leak between threads. Engine names,
+backends and precisions are validated against the live ``repro.engines``
+registry — a registered plugin is immediately forceable and scopable.
 """
 
 from __future__ import annotations
 
 import contextvars
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence, Tuple, Union
 
-from repro.plan.plan import PLAN_VARIANTS
+from repro.engines import (
+    get_engine,
+    has_engine,
+    registered_backends,
+    registered_variants,
+)
 
 __all__ = ["XFFTConfig", "config", "get_config"]
 
-#: Accepted spellings of the single-precision policy (the paper engine is
-#: complex64 end to end; higher precisions are roadmap items).
-_PRECISIONS = {"complex64": "complex64", "single": "complex64"}
+#: Accepted spellings per canonical precision. "single" is the paper's
+#: complex64 butterfly datapath; "double" resolves to engines registered
+#: with the "double" capability (``reference_x64``), complex128 end to end.
+_PRECISIONS = {
+    "single": "single",
+    "complex64": "single",
+    "float32": "single",
+    "double": "double",
+    "complex128": "double",
+    "float64": "double",
+}
 
 
 @dataclasses.dataclass(frozen=True)
 class XFFTConfig:
     """One immutable configuration snapshot.
 
-    variant   — force a concrete engine schedule for every call in scope;
-                ``None`` (the default) lets ``repro.plan`` decide. This is
-                THE unified default: see the ``repro.xfft`` module
+    variant   — force a concrete registered engine for every call in
+                scope; ``None`` (the default) lets ``repro.plan`` decide.
+                This is THE unified default: see the ``repro.xfft`` module
                 docstring for why the old per-entry-point defaults died.
     mode      — what a plan-cache miss costs: ``"estimate"`` (analytic,
                 instant, trace-safe) or ``"measure"`` (timed sweep when
                 resolution happens outside a jit trace).
-    precision — accumulation dtype policy; only single precision
-                (``"complex64"``) exists today, matching the paper's c64
-                butterfly datapath.
+    precision — numeric precision policy: ``"single"`` (complex64, the
+                paper datapath) or ``"double"`` (complex128 through an
+                x64-capable engine). Part of the plan key: wisdom never
+                crosses precisions.
+    backends  — engine-backend families the planner may consider (e.g.
+                ``("jnp",)`` to exclude the Pallas kernels); ``()`` means
+                all registered backends. Part of the plan key too.
     cache_dir — directory holding the plan-wisdom file for calls in scope
                 (``<cache_dir>/xfft_plans.json``); ``None`` uses the
                 process-wide default cache (``$REPRO_PLAN_CACHE``). Pass
@@ -54,8 +77,9 @@ class XFFTConfig:
 
     variant: Optional[str] = None
     mode: str = "estimate"
-    precision: str = "complex64"
+    precision: str = "single"
     cache_dir: Optional[str] = None
+    backends: Tuple[str, ...] = ()
 
 
 _ACTIVE: contextvars.ContextVar[XFFTConfig] = contextvars.ContextVar(
@@ -68,13 +92,37 @@ def get_config() -> XFFTConfig:
     return _ACTIVE.get()
 
 
+def _canon_backends(
+    backend: Union[str, Sequence[str], None]
+) -> Optional[Tuple[str, ...]]:
+    """Validate a ``backend=`` argument against the live registry.
+
+    Returns the canonical tuple, ``()`` for the explicit clear spellings
+    (``"auto"`` / an empty sequence), or ``None`` for "inherit".
+    """
+    if backend is None:
+        return None
+    if backend == "auto":
+        return ()
+    names = (backend,) if isinstance(backend, str) else tuple(backend)
+    known = registered_backends()
+    for name in names:
+        if name not in known:
+            raise ValueError(
+                f"unknown engine backend {name!r}; registered backends: "
+                f"{known} ('auto' clears an outer restriction)"
+            )
+    return tuple(sorted(set(names)))
+
+
 class config:
     """Set xfft configuration, globally or for a ``with`` scope.
 
     Calling applies the overrides immediately; entering the returned object
     as a context manager makes them scoped (previous configuration restored
     on exit). Unspecified fields inherit from the configuration active at
-    call time, so scopes nest naturally.
+    call time, so scopes nest naturally. ``backend`` accepts one backend
+    name or a sequence of them (``"auto"`` clears an outer restriction).
     """
 
     def __init__(
@@ -83,15 +131,17 @@ class config:
         mode: Optional[str] = None,
         precision: Optional[str] = None,
         cache_dir: Optional[str] = None,
+        backend: Union[str, Sequence[str], None] = None,
     ):
         prev = _ACTIVE.get()
         clear_variant = variant == "auto"  # "auto" clears an outer override
         if clear_variant:
             variant = None
-        elif variant is not None and variant not in PLAN_VARIANTS:
+        elif variant is not None and not has_engine(variant):
             raise ValueError(
-                f"unknown variant {variant!r}; want one of {PLAN_VARIANTS}, "
-                "'auto' to clear an outer override, or None to inherit"
+                f"unknown variant {variant!r}; registered engines: "
+                f"{registered_variants()}, 'auto' to clear an outer "
+                "override, or None to inherit"
             )
         if mode is not None and mode not in ("estimate", "measure"):
             raise ValueError(
@@ -100,10 +150,12 @@ class config:
         if precision is not None:
             if precision not in _PRECISIONS:
                 raise ValueError(
-                    f"unsupported precision {precision!r}; the engine is "
-                    f"single-precision (want one of {sorted(_PRECISIONS)})"
+                    f"unsupported precision {precision!r}; want a spelling "
+                    f"of one of {sorted(set(_PRECISIONS.values()))} "
+                    f"(accepted: {sorted(_PRECISIONS)})"
                 )
             precision = _PRECISIONS[precision]
+        backends = _canon_backends(backend)
         merged = XFFTConfig(
             variant=None if clear_variant else (
                 variant if variant is not None else prev.variant
@@ -116,7 +168,27 @@ class config:
                 None if cache_dir == "" else
                 cache_dir if cache_dir is not None else prev.cache_dir
             ),
+            backends=backends if backends is not None else prev.backends,
         )
+        # A forced variant must be CAPABLE of the scope's constraints —
+        # otherwise config(precision="double", variant="stockham") would
+        # silently compute in complex64 against the documented contract.
+        # Checked on the MERGED config so inherited fields are covered too.
+        if merged.variant is not None:
+            spec = get_engine(merged.variant)
+            if merged.precision not in spec.precisions:
+                raise ValueError(
+                    f"engine {merged.variant!r} cannot serve precision "
+                    f"{merged.precision!r} (it supports {spec.precisions}); "
+                    "force a capable engine or change precision="
+                )
+            if merged.backends and spec.backend not in merged.backends:
+                raise ValueError(
+                    f"engine {merged.variant!r} is on backend "
+                    f"{spec.backend!r}, outside the scoped backend "
+                    f"restriction {merged.backends}; widen backend= or "
+                    "force a different variant"
+                )
         self._token = _ACTIVE.set(merged)
 
     def __enter__(self) -> "config":

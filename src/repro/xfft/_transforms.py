@@ -6,40 +6,85 @@ Every function here follows the same dispatch pipeline:
    errors name the offending axis and size;
 2. move the transform axes last (the engines' canonical layout);
 3. resolve the whole call through :func:`repro.plan.api.resolve_call`
-   (plan cache -> scoped config overrides -> concrete variant);
+   (plan cache -> scoped config overrides -> concrete engine from the
+   ``repro.engines`` registry, capability-filtered by the scope's
+   precision and backend restriction);
 4. run the ``repro.core`` engine implementation under that variant;
 5. apply the ``norm`` scaling on top of the engines' native convention
    (forward unscaled, inverse 1/N — i.e. ``"backward"``).
+
+Precision handling: under ``xfft.config(precision="double")`` every
+public entry point runs its whole body inside ``jax.enable_x64`` — that
+is the only way jax lets 64-bit dtypes survive the plumbing (moveaxis,
+pad, roll and friends re-canonicalize dtypes when x64 is off), and it
+makes the double path work whether or not ``JAX_ENABLE_X64`` is set
+process-wide. The planner then resolves to an engine registered with the
+``"double"`` capability (``reference_x64``) and the call is complex128
+end to end.
 """
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import enable_x64 as _enable_x64
 
 from repro.core.fft1d import _check_pow2 as _core_check_pow2
 from repro.core.fft1d import canonical_axis
 from repro.core.fft1d import fft_impl as _fft_impl
 from repro.core.fft1d import ifft_impl as _ifft_impl
 from repro.core.fft2d import fft2_impl as _fft2_impl
-from repro.core.fft2d import fftshift2, ifftshift2
+from repro.core.fft2d import fftshift2 as _core_fftshift2
 from repro.core.fft2d import ifft2_impl as _ifft2_impl
-from repro.core.rfft import _check_real  # one real-input contract
+from repro.core.fft2d import ifftshift2 as _core_ifftshift2
+from repro.core.rfft import _ensure_real  # one real-input contract
 from repro.core.rfft import irfft2_impl as _irfft2_impl
 from repro.core.rfft import irfft_impl as _irfft_impl
 from repro.core.rfft import rfft2_impl as _rfft2_impl
 from repro.core.rfft import rfft_impl as _rfft_impl
 from repro.plan.api import resolve_call
 from repro.plan.plan import NORMS
+from repro.xfft._config import get_config
 
 __all__ = [
     "fft", "ifft", "fft2", "ifft2", "fftn", "ifftn",
     "rfft", "irfft", "rfft2", "irfft2", "rfftn", "irfftn",
     "fftshift", "ifftshift", "fftshift2", "ifftshift2",
+    "fftfreq", "rfftfreq",
 ]
+
+
+def _precision_scope(fn):
+    """Run the wrapped entry point under ``jax.enable_x64`` when the scoped
+    precision is double, so 64-bit dtypes survive every jnp op inside."""
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        if get_config().precision == "double":
+            with _enable_x64():
+                return fn(*args, **kwargs)
+        return fn(*args, **kwargs)
+
+    return wrapper
+
+
+def _cdtype():
+    """The scope's complex dtype (what inverse entry points cast input to)."""
+    return jnp.complex128 if get_config().precision == "double" else jnp.complex64
+
+
+def _rdtype():
+    """The scope's real dtype (what real-input entry points cast to)."""
+    return jnp.float64 if get_config().precision == "double" else jnp.float32
+
+
+def _real_input(x, name: str):
+    """Validate real input and cast it to the scope's float width."""
+    return _ensure_real(x, name).astype(_rdtype())
 
 
 def _check_norm(norm: Optional[str]) -> str:
@@ -95,7 +140,11 @@ def _scale(y: jax.Array, norm: str, n: int, forward: bool) -> jax.Array:
         factor = 1.0 / math.sqrt(n) if forward else math.sqrt(n)
     else:  # "forward"
         factor = 1.0 / n if forward else float(n)
-    return y * jnp.asarray(factor, dtype=jnp.float32)
+    # Match the factor's width to the data so a complex128 result is not
+    # dragged down by f32 rounding of the scale (and a single-precision
+    # result never pays an f64 promotion).
+    wide = y.dtype in (jnp.complex128, jnp.float64)
+    return y * jnp.asarray(factor, dtype=jnp.float64 if wide else jnp.float32)
 
 
 def _moved_shape(shape: Tuple[int, ...], axis: int) -> Tuple[int, ...]:
@@ -106,6 +155,7 @@ def _moved_shape(shape: Tuple[int, ...], axis: int) -> Tuple[int, ...]:
 # ------------------------------ 1D complex ------------------------------
 
 
+@_precision_scope
 def fft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
     """1D FFT along ``axis``; scipy.fft-compatible, plan-backed dispatch."""
     norm = _check_norm(norm)
@@ -120,6 +170,7 @@ def fft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
     return _scale(y, norm, length, forward=True)
 
 
+@_precision_scope
 def ifft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
     """Inverse 1D FFT along ``axis`` (norm-aware, plan-backed)."""
     norm = _check_norm(norm)
@@ -163,6 +214,7 @@ def _unmove_2d(y, canon, moved):
     return jnp.moveaxis(y, (-2, -1), canon) if moved else y
 
 
+@_precision_scope
 def fft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     """2D FFT over ``axes``; scipy.fft-compatible, plan-backed dispatch."""
     x, norm, canon, moved = _prep_2d(x, s, axes, norm, "fft2")
@@ -172,6 +224,7 @@ def fft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     return _unmove_2d(_scale(y, norm, h * w, forward=True), canon, moved)
 
 
+@_precision_scope
 def ifft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     """Inverse 2D FFT over ``axes`` (norm-aware, plan-backed)."""
     x, norm, canon, moved = _prep_2d(x, s, axes, norm, "ifft2")
@@ -196,6 +249,7 @@ def _fftn_axes(x, s, axes, name):
     return axes
 
 
+@_precision_scope
 def fftn(x, s=None, axes=None, norm: Optional[str] = None):
     """N-D FFT: separable 1D passes (a plan per axis); 2-axis calls take
     the dedicated ``fft2d`` planning kind via :func:`fft2`."""
@@ -214,6 +268,7 @@ def fftn(x, s=None, axes=None, norm: Optional[str] = None):
     return _scale(x, norm, total, forward=True)
 
 
+@_precision_scope
 def ifftn(x, s=None, axes=None, norm: Optional[str] = None):
     """Inverse N-D FFT (see :func:`fftn`)."""
     x = jnp.asarray(x)
@@ -236,10 +291,11 @@ def ifftn(x, s=None, axes=None, norm: Optional[str] = None):
 
 
 
+@_precision_scope
 def rfft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
     """Real-input FFT -> non-redundant half spectrum (..., N/2+1)."""
     norm = _check_norm(norm)
-    x = _check_real(x, "rfft")
+    x = _real_input(x, "rfft")
     ax = _canon_axis(axis, x.ndim, "rfft")
     if n is not None:
         x = _resize_axis(x, int(n), ax)
@@ -250,11 +306,12 @@ def rfft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None)
     return _scale(y, norm, length, forward=True)
 
 
+@_precision_scope
 def irfft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
     """Inverse of :func:`rfft`: half spectrum -> real signal of length ``n``
     (default ``2*(width-1)``)."""
     norm = _check_norm(norm)
-    x = jnp.asarray(x).astype(jnp.complex64)
+    x = jnp.asarray(x).astype(_cdtype())
     ax = _canon_axis(axis, x.ndim, "irfft")
     length = int(n) if n is not None else 2 * (x.shape[ax] - 1)
     _check_pow2(length, ax, "irfft")
@@ -266,9 +323,10 @@ def irfft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None
     return _scale(y, norm, length, forward=False)
 
 
+@_precision_scope
 def rfft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     """2D real-input FFT -> (..., H, W/2+1) half spectrum, plan-backed."""
-    x = _check_real(x, "rfft2")
+    x = _real_input(x, "rfft2")
     x, norm, canon, moved = _prep_2d(x, s, axes, norm, "rfft2")
     h, w = x.shape[-2], x.shape[-1]
     plan = resolve_call("rfft2d", x.shape, dtype="float32")
@@ -276,10 +334,11 @@ def rfft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     return _unmove_2d(_scale(y, norm, h * w, forward=True), canon, moved)
 
 
+@_precision_scope
 def irfft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     """Inverse of :func:`rfft2`: (..., H, W/2+1) -> real (..., H, W)."""
     norm = _check_norm(norm)
-    x = jnp.asarray(x).astype(jnp.complex64)
+    x = jnp.asarray(x).astype(_cdtype())
     if x.ndim < 2:
         raise ValueError(f"irfft2 needs at least a 2D array, got shape {x.shape}")
     if len(axes) != 2:
@@ -305,13 +364,14 @@ def irfft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
 # ------------------------------ N-D real ------------------------------
 
 
+@_precision_scope
 def rfftn(x, s=None, axes=None, norm: Optional[str] = None):
     """N-D real-input FFT: the two-for-one ``rfft`` along the LAST of
     ``axes``, complex passes over the rest — a real array never round-trips
     through a full complex ``fftn`` (half the arithmetic and traffic on the
     innermost, largest pass). 1- and 2-axis calls take the dedicated
     ``rfft1d``/``rfft2d`` planning kinds."""
-    x = _check_real(x, "rfftn")
+    x = _real_input(x, "rfftn")
     axes = _fftn_axes(x, s, axes, "rfftn")
     if len(axes) == 1:
         return rfft(x, n=None if s is None else int(s[0]), axis=axes[0], norm=norm)
@@ -331,11 +391,12 @@ def rfftn(x, s=None, axes=None, norm: Optional[str] = None):
     return _scale(y, norm, total, forward=True)
 
 
+@_precision_scope
 def irfftn(x, s=None, axes=None, norm: Optional[str] = None):
     """Inverse of :func:`rfftn`: complex inverse passes over the leading
     axes, then the half-spectrum ``irfft`` along the last -> real output."""
     axes_in = axes
-    x = jnp.asarray(x).astype(jnp.complex64)
+    x = jnp.asarray(x).astype(_cdtype())
     axes = _fftn_axes(x, s, axes_in, "irfftn")
     if len(axes) == 1:
         return irfft(x, n=None if s is None else int(s[0]), axis=axes[0], norm=norm)
@@ -359,6 +420,7 @@ def irfftn(x, s=None, axes=None, norm: Optional[str] = None):
 # ------------------------------- shifts -------------------------------
 
 
+@_precision_scope
 def fftshift(x, axes=None):
     """Move the zero-frequency bin to the centre (numpy-compatible)."""
     x = jnp.asarray(x)
@@ -370,6 +432,7 @@ def fftshift(x, axes=None):
     return jnp.roll(x, [x.shape[a] // 2 for a in axes], axes)
 
 
+@_precision_scope
 def ifftshift(x, axes=None):
     """Exact inverse of :func:`fftshift` (correct for odd lengths too)."""
     x = jnp.asarray(x)
@@ -379,3 +442,65 @@ def ifftshift(x, axes=None):
         axes = (axes,)
     axes = _canon_axes(axes, x.ndim, "ifftshift")
     return jnp.roll(x, [-(x.shape[a] // 2) for a in axes], axes)
+
+
+@_precision_scope
+def fftshift2(x):
+    """Centre the zero-frequency bin of the trailing two axes."""
+    return _core_fftshift2(jnp.asarray(x))
+
+
+@_precision_scope
+def ifftshift2(x):
+    """Exact inverse of :func:`fftshift2` (sign-correct for odd lengths)."""
+    return _core_ifftshift2(jnp.asarray(x))
+
+
+# ---------------------------- sample frequencies ----------------------------
+
+
+def _freq_width_ctx(dtype):
+    """Context that lets an EXPLICIT 64-bit dtype pin survive: outside a
+    double scope jax would silently canonicalize a float64 request down to
+    float32, which is the one thing a pinned width must never do."""
+    import contextlib
+
+    import numpy as np
+
+    if dtype is not None and np.dtype(dtype).itemsize == 8:
+        return _enable_x64()
+    return contextlib.nullcontext()
+
+
+@_precision_scope
+def fftfreq(n, d: float = 1.0, *, dtype=None):
+    """Sample frequencies of an ``n``-point FFT (scipy.fft parity).
+
+    Bin ``k`` of :func:`fft` oscillates at ``fftfreq(n, d)[k]`` cycles per
+    unit of the sample spacing ``d``. Pure index arithmetic — no engine —
+    but it lives here so frequency grids follow the same precision scope
+    as the transforms they index (``dtype=`` pins a width explicitly,
+    honored whatever the ambient scope).
+    """
+    n = int(n)
+    if n <= 0:
+        raise ValueError(f"fftfreq needs a positive sample count, got {n}")
+    with _freq_width_ctx(dtype):
+        dt = dtype if dtype is not None else _rdtype()
+        k = jnp.concatenate([
+            jnp.arange(0, (n - 1) // 2 + 1, dtype=dt),
+            jnp.arange(-(n // 2), 0, dtype=dt),
+        ])
+        return k / jnp.asarray(n * d, dtype=dt)
+
+
+@_precision_scope
+def rfftfreq(n, d: float = 1.0, *, dtype=None):
+    """Sample frequencies of the :func:`rfft` half spectrum (scipy parity):
+    the ``n // 2 + 1`` non-negative bins of :func:`fftfreq`."""
+    n = int(n)
+    if n <= 0:
+        raise ValueError(f"rfftfreq needs a positive sample count, got {n}")
+    with _freq_width_ctx(dtype):
+        dt = dtype if dtype is not None else _rdtype()
+        return jnp.arange(0, n // 2 + 1, dtype=dt) / jnp.asarray(n * d, dtype=dt)

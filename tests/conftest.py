@@ -1,6 +1,8 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — unit tests must see 1 device;
 multi-device tests spawn subprocesses with their own flags."""
 
+import os
+
 import numpy as np
 import pytest
 
@@ -8,6 +10,30 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _scoped_test_precision():
+    """Wrap tests in the precision scope named in $REPRO_TEST_PRECISION.
+
+    CI's x64 step sets ``REPRO_TEST_PRECISION=double`` (with
+    ``JAX_ENABLE_X64=1``) to re-run the *precision-agnostic* selections —
+    the xfft norm matrix, rfftn, and the engine conformance/registry
+    suites — through the double-precision engine path. It is NOT a
+    whole-suite knob: tests that force single-only engines via
+    ``xfft.config(variant=...)`` are correctly rejected inside a double
+    scope (an incapable forced variant raises by design), so keep the
+    selection to suites that plan through capability. Unset (the
+    default), this fixture is a no-op.
+    """
+    precision = os.environ.get("REPRO_TEST_PRECISION")
+    if not precision:
+        yield
+        return
+    import repro.xfft as xfft
+
+    with xfft.config(precision=precision):
+        yield
 
 
 def complex_rand(rng, shape):

@@ -1,0 +1,155 @@
+"""Engine conformance: every registered engine, every kind it claims.
+
+Parameterized over the LIVE registry — a third-party registration is
+picked up automatically and gets forward/inverse/roundtrip/numpy-parity
+coverage for free. Execution goes through ``repro.plan.execute`` on a
+hand-built plan, so the conformance path is exactly the planner's
+dispatch path.
+
+Tolerances follow the engine's declared precision: single-precision
+engines are held to the usual f32 budget, double-precision engines to
+1e-10 against numpy's own double transforms.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.engines as engines
+from repro.plan import FFTPlan, execute, problem_key
+
+#: Kinds the suite can drive end-to-end. Pencil plans need a live mesh and
+#: oaconv2d a (image, kernel) pair; both have dedicated suites elsewhere.
+_SHAPES = {
+    "fft1d": (3, 64),
+    "rfft1d": (3, 64),
+    "fft2d": (2, 16, 32),
+    "rfft2d": (2, 16, 32),
+    "fft2d_stream": (3, 8, 16),
+}
+
+_SKIP_KINDS = ("fft2d_pencil", "oaconv2d")
+
+
+def _cases():
+    out = []
+    for spec in engines.iter_engines():
+        for kind in spec.kinds:
+            if kind in _SKIP_KINDS:
+                continue
+            for direction in ("fwd", "inv"):
+                if kind == "fft2d_stream" and direction == "inv":
+                    continue  # the streaming processor is forward-only
+                out.append(pytest.param(
+                    spec.name, kind, direction,
+                    id=f"{spec.name}-{kind}-{direction}",
+                ))
+    return out
+
+
+def _tolerance(spec) -> float:
+    return 1e-10 if "double" in spec.precisions else 2e-3
+
+
+def _precision_of(spec) -> str:
+    return "double" if "double" in spec.precisions else "single"
+
+
+def _plan_for(spec, kind, direction):
+    key = problem_key(
+        kind,
+        _SHAPES[kind],
+        dtype="float32" if kind.startswith("r") else "complex64",
+        direction=direction,
+        precision=_precision_of(spec),
+    )
+    return FFTPlan(key=key, variant=spec.name, precision=key.precision)
+
+
+def _forward_input(kind, rng):
+    shape = _SHAPES[kind]
+    if kind.startswith("r"):
+        return rng.standard_normal(shape).astype(np.float32)
+    return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(
+        np.complex64
+    )
+
+
+def _numpy_reference(kind, direction, x):
+    """numpy.fft in double precision (the x64 oracle for every engine)."""
+    x = np.asarray(x)
+    x64 = x.astype(np.complex128 if np.iscomplexobj(x) else np.float64)
+    fwd = {
+        "fft1d": np.fft.fft,
+        "fft2d": np.fft.fft2,
+        "fft2d_stream": np.fft.fft2,
+        "rfft1d": np.fft.rfft,
+        "rfft2d": np.fft.rfft2,
+    }
+    inv = {
+        "fft1d": np.fft.ifft,
+        "fft2d": np.fft.ifft2,
+        "rfft1d": np.fft.irfft,
+        "rfft2d": np.fft.irfft2,
+    }
+    return (inv if direction == "inv" else fwd)[kind](x64)
+
+
+def _inverse_input(kind, rng):
+    """What the inverse runner consumes: a half spectrum for real kinds."""
+    x = _forward_input(kind, rng)
+    if kind == "rfft1d":
+        return np.fft.rfft(x).astype(np.complex64)
+    if kind == "rfft2d":
+        return np.fft.rfft2(x).astype(np.complex64)
+    return x
+
+
+def _assert_close(got, ref, tol):
+    got, ref = np.asarray(got), np.asarray(ref)
+    scale = max(1.0, np.max(np.abs(ref)))
+    np.testing.assert_allclose(got / scale, ref / scale, atol=tol)
+
+
+@pytest.mark.parametrize("name,kind,direction", _cases())
+def test_engine_matches_numpy(name, kind, direction, rng):
+    spec = engines.get_engine(name)
+    plan = _plan_for(spec, kind, direction)
+    x = _inverse_input(kind, rng) if direction == "inv" else _forward_input(kind, rng)
+    got = execute(plan, jnp.asarray(x))
+    _assert_close(got, _numpy_reference(kind, direction, x), _tolerance(spec))
+
+
+@pytest.mark.parametrize(
+    "name,kind",
+    [p for p in [
+        pytest.param(s.name, k, id=f"{s.name}-{k}")
+        for s in engines.iter_engines()
+        for k in s.kinds
+        if k in ("fft1d", "fft2d", "rfft1d", "rfft2d")
+    ]],
+)
+def test_engine_roundtrip(name, kind, rng):
+    """inverse(forward(x)) == x under one engine — the conformance floor."""
+    spec = engines.get_engine(name)
+    x = _forward_input(kind, rng)
+    fwd = execute(_plan_for(spec, kind, "fwd"), jnp.asarray(x))
+    back = execute(_plan_for(spec, kind, "inv"), fwd)
+    _assert_close(back, x, _tolerance(spec))
+
+
+def test_double_engines_emit_double(rng):
+    """Every double-capable engine must actually produce 64-bit output."""
+    doubles = engines.iter_engines(precision="double")
+    assert doubles, "registry lost its double-precision engine"
+    for spec in doubles:
+        if "fft1d" in spec.kinds:
+            x = (rng.standard_normal((2, 32))
+                 + 1j * rng.standard_normal((2, 32))).astype(np.complex64)
+            y = execute(_plan_for(spec, "fft1d", "fwd"), jnp.asarray(x))
+            assert np.asarray(y).dtype == np.complex128
+        if "rfft2d" in spec.kinds:
+            xr = rng.standard_normal((8, 16)).astype(np.float32)
+            y = execute(_plan_for(spec, "rfft2d", "fwd"), jnp.asarray(xr))
+            assert np.asarray(y).dtype == np.complex128

@@ -1,0 +1,192 @@
+"""The acceptance gate for the precision="double" path: all eight xfft
+transforms, complex128 end to end, matching numpy's double transforms to
+<= 1e-10 through the registered reference_x64 engine — with wisdom keyed
+apart from the single-precision world."""
+
+import numpy as np
+import pytest
+
+import repro.xfft as xfft
+from repro.plan import default_cache, problem_key, reset_default_cache
+
+TOL = 1e-10
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default_cache():
+    reset_default_cache()
+    yield
+    reset_default_cache()
+
+
+def _close(got, ref):
+    got, ref = np.asarray(got), np.asarray(ref)
+    scale = max(1.0, np.max(np.abs(ref)))
+    assert np.max(np.abs(got - ref)) / scale <= TOL
+
+
+def _crand(rng, shape):
+    return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(
+        np.complex64
+    )
+
+
+def test_all_eight_transforms_double_match_numpy(rng):
+    """fft/ifft/fft2/ifft2/rfft/irfft/rfft2/irfft2 under one double scope."""
+    z1 = _crand(rng, (3, 64))
+    z2 = _crand(rng, (2, 16, 32))
+    x1 = rng.standard_normal((3, 64)).astype(np.float32)
+    x2 = rng.standard_normal((2, 16, 32)).astype(np.float32)
+    h1 = np.fft.rfft(x1).astype(np.complex64)
+    h2 = np.fft.rfft2(x2).astype(np.complex64)
+    z1d = z1.astype(np.complex128)
+    z2d = z2.astype(np.complex128)
+    with xfft.config(precision="double"):
+        cases = (
+            (xfft.fft(z1), np.fft.fft(z1d), np.complex128),
+            (xfft.ifft(z1), np.fft.ifft(z1d), np.complex128),
+            (xfft.fft2(z2), np.fft.fft2(z2d), np.complex128),
+            (xfft.ifft2(z2), np.fft.ifft2(z2d), np.complex128),
+            (xfft.rfft(x1), np.fft.rfft(x1.astype(np.float64)), np.complex128),
+            (xfft.irfft(h1), np.fft.irfft(h1.astype(np.complex128)), np.float64),
+            (xfft.rfft2(x2), np.fft.rfft2(x2.astype(np.float64)), np.complex128),
+            (xfft.irfft2(h2), np.fft.irfft2(h2.astype(np.complex128)), np.float64),
+        )
+        for got, ref, dtype in cases:
+            assert np.asarray(got).dtype == dtype
+            _close(got, ref)
+
+
+@pytest.mark.parametrize("norm", ["backward", "ortho", "forward"])
+def test_double_norm_conventions(rng, norm):
+    z = _crand(rng, (4, 32))
+    zd = z.astype(np.complex128)
+    with xfft.config(precision="double"):
+        _close(xfft.fft(z, norm=norm), np.fft.fft(zd, norm=norm))
+        _close(xfft.ifft(z, norm=norm), np.fft.ifft(zd, norm=norm))
+
+
+def test_double_resolves_to_reference_x64(rng):
+    z = _crand(rng, (16, 16))
+    with xfft.config(precision="double"):
+        np.asarray(xfft.fft2(z))
+    # runtime keys label the TRUE data width under double (complex128)
+    plan = default_cache().get(
+        problem_key("fft2d", (16, 16), dtype="complex128", precision="double")
+    )
+    assert plan is not None
+    assert plan.variant == "reference_x64"
+    assert plan.precision == "double"
+    # the single-precision world is untouched: its key is different and
+    # still unplanned
+    assert default_cache().get(problem_key("fft2d", (16, 16))) is None
+
+
+def test_double_wisdom_never_serves_single(rng):
+    z = _crand(rng, (16, 16))
+    with xfft.config(precision="double"):
+        np.asarray(xfft.fft2(z))
+    with xfft.config(precision="single"):
+        got = np.asarray(xfft.fft2(z))  # back in a single scope
+        assert got.dtype == np.complex64
+        single = default_cache().get(problem_key("fft2d", (16, 16)))
+    assert single is not None and single.variant != "reference_x64"
+
+
+def test_double_scope_restores(rng):
+    z = _crand(rng, (4, 16))
+    with xfft.config(precision="single"):
+        with xfft.config(precision="double"):
+            assert np.asarray(xfft.fft(z)).dtype == np.complex128
+        assert np.asarray(xfft.fft(z)).dtype == np.complex64
+        assert xfft.get_config().precision == "single"
+
+
+def test_fftn_ifftn_double(rng):
+    z = _crand(rng, (4, 8, 16))
+    zd = z.astype(np.complex128)
+    with xfft.config(precision="double"):
+        _close(xfft.fftn(z), np.fft.fftn(zd))
+        _close(xfft.ifftn(z), np.fft.ifftn(zd))
+    # rfftn in double: real N-D path stays off complex fftn and still doubles
+    xr = rng.standard_normal((4, 8, 16)).astype(np.float32)
+    with xfft.config(precision="double"):
+        got = xfft.rfftn(xr)
+        assert np.asarray(got).dtype == np.complex128
+        _close(got, np.fft.rfftn(xr.astype(np.float64)))
+
+
+def test_fftfreq_follows_precision_scope():
+    np.testing.assert_allclose(np.asarray(xfft.fftfreq(8)), np.fft.fftfreq(8))
+    np.testing.assert_allclose(np.asarray(xfft.rfftfreq(8)), np.fft.rfftfreq(8))
+    with xfft.config(precision="single"):
+        assert np.asarray(xfft.fftfreq(8)).dtype == np.float32
+    with xfft.config(precision="double"):
+        f = np.asarray(xfft.fftfreq(12, d=0.5))
+        assert f.dtype == np.float64
+        np.testing.assert_allclose(f, np.fft.fftfreq(12, d=0.5))
+        r = np.asarray(xfft.rfftfreq(12, d=0.5))
+        assert r.dtype == np.float64
+        np.testing.assert_allclose(r, np.fft.rfftfreq(12, d=0.5))
+
+
+def test_forced_variant_must_be_capable_of_scope():
+    """config() rejects a forced engine that cannot serve the scope's
+    precision or backend restriction — no silent complex64 fallback."""
+    with pytest.raises(ValueError, match="cannot serve precision"):
+        xfft.config(precision="double", variant="stockham")
+    with pytest.raises(ValueError, match="cannot serve precision"):
+        with xfft.config(precision="single"):
+            xfft.config(variant="reference_x64")  # x64 engine is double-only
+    with pytest.raises(ValueError, match="outside the scoped backend"):
+        xfft.config(backend="jnp", precision="single", variant="fused_r4")
+    # the capable combinations are accepted
+    with xfft.config(precision="double", variant="reference_x64"):
+        assert xfft.get_config().variant == "reference_x64"
+    with xfft.config(backend="pallas", precision="single", variant="fused_r4"):
+        assert xfft.get_config().backends == ("pallas",)
+
+
+def test_explicit_double_wisdom_serves_scoped_calls(rng):
+    """plan_fft(precision="double") and a scoped xfft call must land on ONE
+    cache key — ProblemKey normalizes the dtype label to the true width,
+    wherever the key is born (regression: pre-tuned double wisdom used to
+    be keyed complex64 and never served)."""
+    from repro.plan import PlanCache, plan_fft
+    from repro.plan.api import resolve_call
+
+    cache = PlanCache()
+    tuned = plan_fft("fft2d", (16, 16), mode="measure", cache=cache,
+                     measure_iters=1, precision="double")
+    assert tuned.key.dtype == "complex128"  # label normalized at birth
+    with xfft.config(precision="double"):
+        hit = resolve_call("fft2d", (16, 16), cache=cache)
+    assert hit is cache.get(tuned.key) and hit.mode == "measure"
+
+
+def test_measure_sweep_respects_double_precision(rng):
+    """MEASURE on a double key times real 64-bit inputs and yields a
+    double plan (regression: sweeps used to feed complex64)."""
+    from repro.plan import PlanCache, plan_fft
+
+    timings = {}
+    plan = plan_fft("fft1d", (2, 32), mode="measure", cache=PlanCache(),
+                    measure_iters=1, timings_out=timings,
+                    precision="double")
+    assert set(timings) == {"reference_x64"}
+    assert plan.variant == "reference_x64"
+    assert plan.precision == "double" and plan.mode == "measure"
+
+
+def test_backend_scope_restricts_planning(rng):
+    x = rng.standard_normal((16, 16)).astype(np.float32)
+    with xfft.config(backend="jnp", precision="single"):
+        got = np.asarray(xfft.rfft2(x))
+        key = problem_key("rfft2d", (16, 16), dtype="float32",
+                          backends=("jnp",))
+        plan = default_cache().get(key)
+    np.testing.assert_allclose(got, np.fft.rfft2(x), atol=1e-3)
+    assert plan is not None
+    assert plan.variant in ("looped", "unrolled", "stockham", "radix4")
+    with pytest.raises(ValueError, match="registered backends"):
+        xfft.config(backend="cuda_graphs")
