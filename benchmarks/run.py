@@ -10,9 +10,10 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import accuracy, fft_bench, imaging_bench, pencil_overlap
-from benchmarks import plan_autotune, table1_resources, table2_resources
-from benchmarks import table5_utilization, table6_delay, throughput
+from benchmarks import accuracy, fft_bench, imaging_bench, obs_bench
+from benchmarks import pencil_overlap, plan_autotune, table1_resources
+from benchmarks import table2_resources, table5_utilization, table6_delay
+from benchmarks import throughput
 
 ALL = {
     "table1": table1_resources.run,
@@ -25,6 +26,7 @@ ALL = {
     "plan_autotune": plan_autotune.run,
     "fft": fft_bench.run,
     "imaging": imaging_bench.run,
+    "obs": obs_bench.run,
 }
 
 

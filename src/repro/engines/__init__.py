@@ -68,6 +68,8 @@ def apply_engine(name: str, kind: str, x, *, direction: str = "fwd",
     before the engine ever saw it. ``axis`` (1D kinds only) names the
     transform axis; the executor itself always sees axes-last layout.
     """
+    from repro import obs  # leaf module; records every registry dispatch
+
     spec = get_engine(name)
     fn = spec.op(kind, direction)
 
@@ -81,9 +83,17 @@ def apply_engine(name: str, kind: str, x, *, direction: str = "fwd",
                 return jnp.moveaxis(fn(jnp.moveaxis(arr, ax, -1)), -1, ax)
         return fn(arr)
 
-    if spec.requires_x64:
-        from jax.experimental import enable_x64
+    with obs.span(
+        "engine.apply",
+        engine=name,
+        backend=spec.backend,
+        kind=kind,
+        direction=direction,
+        x64=spec.requires_x64,
+    ):
+        if spec.requires_x64:
+            from jax.experimental import enable_x64
 
-        with enable_x64():
-            return run()
-    return run()
+            with enable_x64():
+                return run()
+        return run()

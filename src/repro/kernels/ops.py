@@ -23,6 +23,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.fft1d import bit_reversal_permutation
 from repro.kernels.butterfly import butterfly_stage
 from repro.kernels.fft_radix2 import (
@@ -89,6 +90,21 @@ def fft2_fits_budget(h: int, w: int, *, real: bool = False) -> bool:
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _failover_event(kind: str, h: int, w: int, frames: int, *, real: bool) -> None:
+    """Record one fused->unfused VMEM failover (the decision was silent
+    before: a frame over budget quietly paid three HBM round trips instead
+    of one). Emitted at trace time — once per compiled shape, which is
+    exactly the granularity the decision is made at."""
+    obs.emit(
+        "kernel.failover",
+        kind=kind,
+        shape=(h, w),
+        frames=frames,
+        working_set=fft2_working_set(h, w, real=real),
+        budget=vmem_budget_bytes(),
+    )
 
 
 def _split(x: jax.Array):
@@ -168,6 +184,7 @@ def fft2_kernel(x: jax.Array, *, radix: int = 2, interpret: bool | None = None) 
     else:
         # Frame working set exceeds VMEM: row pass, materialised corner
         # turn, column pass — more HBM trips, but never an overflow.
+        _failover_event("fft2d", h, w, f, real=False)
         yr, yi = _fft_rows(re.reshape(f * h, w), im.reshape(f * h, w),
                            radix=radix, interpret=interpret)
         yr = yr.reshape(f, h, w).swapaxes(-1, -2).reshape(f * w, h)
@@ -210,6 +227,7 @@ def rfft2_kernel(x: jax.Array, *, radix: int = 2, interpret: bool | None = None)
         # The column batch (f·(W/2+1) rows) is odd, which would force the
         # fused kernel to a degenerate 1-row tile — the jnp engine handles
         # that pass instead.
+        _failover_event("rfft2d", h, w, f, real=True)
         from repro.core.fft1d import fft_impl  # lazy: core imports kernels
 
         half = w // 2 + 1
@@ -239,6 +257,7 @@ def irfft2_kernel(y: jax.Array, *, radix: int = 2, interpret: bool | None = None
     else:
         # Column IFFT via the jnp engine (the odd f·(W/2+1) column batch
         # defeats the fused kernel's row tiling), then the fused row irfft.
+        _failover_event("irfft2d", h, w, f, real=True)
         from repro.core.fft1d import ifft_impl  # lazy: core imports kernels
 
         z = ifft_impl((re + 1j * im).swapaxes(-1, -2), variant=_jnp_variant(radix))

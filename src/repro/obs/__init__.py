@@ -1,0 +1,52 @@
+"""repro.obs — structured tracing, metrics and plan introspection.
+
+The software analog of the paper's control unit + RAM controller
+*accounting*: every decision point in the stack — planner resolution
+(``repro.plan``), MEASURE sweeps, engine dispatch (``repro.engines``),
+fused-kernel VMEM failovers (``repro.kernels``), wisdom load/save, and
+service batching (``repro.serve``) — emits structured events through
+this package.
+
+    from repro import obs
+    import repro.xfft as xfft
+
+    with obs.capture() as trace:
+        xfft.fft2(x)                       # cold: plan miss
+        xfft.fft2(x)                       # warm: plan hit
+    [e["outcome"] for e in trace.select("plan.resolve")]  # ['miss', 'hit']
+
+Process-wide counters stay on even without a capture scope (one dict
+increment per event — the ``benchmarks/obs_bench.py`` gate holds the
+instrumented hot path within 3% of uninstrumented); ``xfft.report()``
+renders them next to the live plan cache, FFTW ``export_wisdom``-style.
+"""
+
+from repro.obs.record import (
+    Event,
+    Trace,
+    capture,
+    count,
+    counters,
+    emit,
+    enabled,
+    pop_observe,
+    profiling,
+    push_observe,
+    reset_counters,
+    span,
+)
+
+__all__ = [
+    "Event",
+    "Trace",
+    "capture",
+    "count",
+    "counters",
+    "emit",
+    "enabled",
+    "pop_observe",
+    "profiling",
+    "push_observe",
+    "reset_counters",
+    "span",
+]

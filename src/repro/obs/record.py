@@ -1,0 +1,273 @@
+"""The observability substrate: events, spans, counters, capture scopes.
+
+The paper's processor is legible because its control unit *accounts for*
+every data movement it schedules: the RAM controller knows which buffer
+each butterfly pass read and wrote. The software control unit
+(``repro.plan`` over ``repro.engines``) makes the same class of decisions
+— cache hit or MEASURE sweep, fused kernel or unfused failover, one
+batched group or many — and this module is where those decisions become
+*records* instead of vanishing into return values.
+
+Three primitives, one cost rule:
+
+* :func:`emit` — one structured :class:`Event` (name + fields). Delivered
+  to every :func:`capture` scope on the contextvars stack; when no scope
+  is active the only work done is one counter increment and one
+  contextvar read (the "near-zero when disabled" contract the
+  ``benchmarks/obs_bench.py`` gate enforces).
+* :func:`span` — a timed region. Emits its event (with ``duration_us``)
+  on exit and, when profiling is scoped on (``xfft.config(observe=True)``
+  or ``capture(profile=True)``), also wraps the region in
+  ``jax.profiler.TraceAnnotation`` so it lands in XLA profiles.
+* :func:`count` / :func:`counters` — process-wide monotonic counters.
+  Always on: they are how a process that never opens a capture scope
+  (a serving fleet member) still answers "did my shipped wisdom load?"
+  through :func:`repro.xfft.report`.
+
+Scoping is :mod:`contextvars`-based: capture scopes nest (an inner scope
+sees only its own window; every enclosing scope sees the inner events
+too), compose across async tasks, and never observe another thread's
+events. This module imports nothing from the rest of the repo — plan,
+engines, kernels and serve all instrument through it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+__all__ = [
+    "Event",
+    "Trace",
+    "capture",
+    "count",
+    "counters",
+    "emit",
+    "enabled",
+    "profiling",
+    "reset_counters",
+    "span",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One recorded decision: a dotted name, a timestamp, its fields."""
+
+    name: str
+    t: float                    # time.perf_counter() at emission
+    fields: Dict[str, Any]
+
+    def __getitem__(self, field: str) -> Any:
+        return self.fields[field]
+
+    def get(self, field: str, default: Any = None) -> Any:
+        return self.fields.get(field, default)
+
+
+class Trace:
+    """Events recorded by one :func:`capture` scope, in emission order."""
+
+    def __init__(self):
+        self.events: List[Event] = []
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self) -> Iterator[Event]:
+        return iter(self.events)
+
+    def append(self, event: Event) -> None:
+        self.events.append(event)
+
+    def select(self, name: str) -> List[Event]:
+        """Events with exactly ``name``, or under a ``"prefix.*"`` glob."""
+        if name.endswith(".*"):
+            prefix = name[:-1]  # keep the dot: "plan.*" -> "plan."
+            return [e for e in self.events if e.name.startswith(prefix)]
+        return [e for e in self.events if e.name == name]
+
+    def first(self, name: str) -> Optional[Event]:
+        hits = self.select(name)
+        return hits[0] if hits else None
+
+    def counts(self) -> Dict[str, int]:
+        """Event-name histogram of this trace's window."""
+        out: Dict[str, int] = {}
+        for e in self.events:
+            out[e.name] = out.get(e.name, 0) + 1
+        return out
+
+    def summary(self) -> str:
+        """Human-readable one-line-per-event rendering."""
+        lines = [f"trace: {len(self.events)} events"]
+        for e in self.events:
+            fields = " ".join(f"{k}={_short(v)}" for k, v in e.fields.items())
+            lines.append(f"  {e.name}  {fields}")
+        return "\n".join(lines)
+
+
+def _short(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    s = str(v)
+    return s if len(s) <= 48 else s[:45] + "..."
+
+
+# ------------------------------ collectors --------------------------------
+
+_STACK: contextvars.ContextVar[Tuple[Trace, ...]] = contextvars.ContextVar(
+    "repro_obs_stack", default=()
+)
+_PROFILE: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_obs_profile", default=False
+)
+
+_COUNTS: Dict[str, int] = {}
+_COUNTS_LOCK = threading.Lock()
+
+
+def enabled() -> bool:
+    """True when at least one capture scope is collecting events here."""
+    return bool(_STACK.get())
+
+
+def profiling() -> bool:
+    """True when spans should also become ``jax.profiler`` annotations."""
+    return _PROFILE.get()
+
+
+def count(name: str, n: int = 1) -> None:
+    """Bump the process-wide counter ``name`` by ``n`` (thread-safe)."""
+    with _COUNTS_LOCK:
+        _COUNTS[name] = _COUNTS.get(name, 0) + n
+
+
+def counters() -> Dict[str, int]:
+    """Snapshot of every process-wide counter, sorted by name."""
+    with _COUNTS_LOCK:
+        return dict(sorted(_COUNTS.items()))
+
+
+def reset_counters() -> None:
+    """Zero the process-wide counters (tests / benchmark harnesses)."""
+    with _COUNTS_LOCK:
+        _COUNTS.clear()
+
+
+def emit(name: str, **fields: Any) -> Optional[Event]:
+    """Record one event; returns it when any capture scope received it.
+
+    Always bumps the ``name`` counter. With no active scope that counter
+    increment and one contextvar read are the entire cost — the fields
+    dict the caller built is dropped without ever becoming an Event.
+    """
+    count(name)
+    stack = _STACK.get()
+    if not stack:
+        return None
+    event = Event(name=name, t=time.perf_counter(), fields=fields)
+    for trace in stack:
+        trace.append(event)
+    return event
+
+
+def _annotation(name: str):
+    """A ``jax.profiler.TraceAnnotation`` for ``name``, or None when jax
+    (or the annotation API) is unavailable — profiling degrades silently
+    rather than making obs depend on jax."""
+    try:  # pragma: no cover - depends on installed jax
+        from jax.profiler import TraceAnnotation
+
+        return TraceAnnotation(name)
+    except Exception:  # pragma: no cover
+        return None
+
+
+@contextlib.contextmanager
+def span(name: str, **fields: Any):
+    """Time a region; emit ``name`` with ``duration_us`` on exit.
+
+    Yields a mutable dict merged into the final event's fields, so
+    results computed inside the region can ride the span's event::
+
+        with obs.span("plan.measure", kind=key.kind) as out:
+            out["chosen"] = sweep()
+
+    When profiling is scoped on, the region is also wrapped in a
+    ``jax.profiler.TraceAnnotation`` so it shows up in XLA traces.
+    """
+    extra: Dict[str, Any] = {}
+    stack = _STACK.get()
+    prof = _PROFILE.get()
+    if not stack and not prof:
+        # Disabled fast path: one counter bump, no timing, no Event.
+        count(name)
+        yield extra
+        return
+    annotation = _annotation(name) if prof else None
+    if annotation is not None:
+        annotation.__enter__()
+    t0 = time.perf_counter()
+    try:
+        yield extra
+    finally:
+        duration_us = (time.perf_counter() - t0) * 1e6
+        if annotation is not None:
+            annotation.__exit__(None, None, None)
+        emit(name, duration_us=duration_us, **{**fields, **extra})
+
+
+@contextlib.contextmanager
+def capture(profile: Optional[bool] = None):
+    """Collect every event emitted in this scope into a fresh :class:`Trace`.
+
+    Scopes nest: the inner trace holds only its own window, every
+    enclosing trace receives the inner events too. ``profile=True`` also
+    turns spans into ``jax.profiler`` annotations for the scope
+    (``profile=False`` forces them off; ``None`` inherits).
+    """
+    trace = Trace()
+    token = _STACK.set(_STACK.get() + (trace,))
+    profile_token = (
+        _PROFILE.set(bool(profile)) if profile is not None else None
+    )
+    try:
+        yield trace
+    finally:
+        if profile_token is not None:
+            _PROFILE.reset(profile_token)
+        _STACK.reset(token)
+
+
+# Scope hooks for repro.xfft.config(observe=...): push/pop without a with-
+# block (config supports global-setter usage, so it holds tokens itself).
+
+
+def push_observe(observe) -> Tuple[Any, Any]:
+    """Apply an ``observe`` policy; returns tokens for :func:`pop_observe`.
+
+    ``observe`` is a :class:`Trace` (collect the scope's events into it),
+    ``True`` (profiler annotations on), or ``False`` (both off).
+    """
+    stack_token = None
+    if isinstance(observe, Trace):
+        stack_token = _STACK.set(_STACK.get() + (observe,))
+        profile_token = _PROFILE.set(_PROFILE.get())
+    else:
+        profile_token = _PROFILE.set(bool(observe))
+        if observe is False:
+            stack_token = _STACK.set(())
+    return stack_token, profile_token
+
+
+def pop_observe(tokens: Tuple[Any, Any]) -> None:
+    """Undo one :func:`push_observe` (LIFO)."""
+    stack_token, profile_token = tokens
+    _PROFILE.reset(profile_token)
+    if stack_token is not None:
+        _STACK.reset(stack_token)

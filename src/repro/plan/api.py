@@ -19,9 +19,10 @@ import dataclasses
 import os
 from typing import Dict, Optional, Tuple
 
+from repro import obs
 from repro.plan.autotune import estimate_plan, measure_plan
 from repro.plan.cache import PlanCache, default_cache
-from repro.plan.plan import FFTPlan, problem_key
+from repro.plan.plan import FFTPlan, ProblemKey, problem_key
 
 __all__ = ["plan_fft", "execute", "resolve", "resolve_call"]
 
@@ -71,18 +72,83 @@ def plan_fft(
     # we can do is the analytic model, so a cached ESTIMATE plan already is
     # the answer for both kinds.
     effective_mode = "estimate" if kind in _ESTIMATE_ONLY_KINDS else mode
+    degrade = _degrade_event(key, mode, effective_mode, "estimate_only_kind")
     if not force:
         hit = cache.get(key)
         if hit is not None and (effective_mode == "estimate" or hit.mode == "measure"):
+            _resolve_event("plan_fft", key, mode, "hit", hit, cache)
             return hit
     if effective_mode == "measure":
         plan = measure_plan(key, iters=measure_iters, timings_out=timings_out)
+        outcome = "measured"
     else:
         plan = estimate_plan(key)
+        outcome = "miss"
+        if degrade is not None:
+            plan = dataclasses.replace(plan, degrade_reason=degrade)
     cache.put(plan)
     if cache.path:
         cache.save()
+    _resolve_event("plan_fft", key, mode, outcome, plan, cache)
     return plan
+
+
+def _degrade_event(
+    key: ProblemKey, requested_mode: str, effective_mode: str, reason: str
+) -> Optional[str]:
+    """Emit+count a MEASURE->ESTIMATE degrade; returns the reason or None.
+
+    The record the ROADMAP's wisdom-shipping story needs: a fleet whose
+    plans never tune should be able to read *why* (pencil/oaconv kinds
+    are analytic by construction, a jit trace forbids timing, a forced
+    variant makes timing pointless) instead of inferring it from silence.
+    """
+    if requested_mode != "measure" or effective_mode == "measure":
+        return None
+    obs.emit(
+        "plan.degrade",
+        kind=key.kind,
+        shape=key.shape,
+        direction=key.direction,
+        reason=reason,
+    )
+    obs.count(f"plan.degrade.{reason}")
+    return reason
+
+
+def _resolve_event(
+    entry: str,
+    key: ProblemKey,
+    mode: str,
+    outcome: str,
+    plan: FFTPlan,
+    cache: Optional[PlanCache],
+) -> None:
+    """One ``plan.resolve`` event per planner decision (+ outcome counter).
+
+    ``outcome`` is the cache verdict: ``"hit"`` (cached plan served),
+    ``"miss"`` (fresh ESTIMATE), ``"measured"`` (a timed sweep ran),
+    ``"forced"`` (a scoped variant pin replaced the planned engine).
+    """
+    obs.count(f"plan.resolve.{outcome}")
+    obs.emit(
+        "plan.resolve",
+        entry=entry,
+        kind=key.kind,
+        shape=key.shape,
+        dtype=key.dtype,
+        direction=key.direction,
+        precision=key.precision,
+        mode=mode,
+        outcome=outcome,
+        variant=plan.variant,
+        plan_mode=plan.mode,
+        est_time_s=plan.est_time_s,
+        measured_us=plan.measured_us,
+        degrade_reason=plan.degrade_reason,
+        cache_path=getattr(cache, "path", None),
+        key=key.cache_key(),
+    )
 
 
 def _active_config():
@@ -185,16 +251,32 @@ def resolve_call(
                       cfg.precision, cfg.backends)
     mode = mode if mode is not None else cfg.mode
     plan = cache.get(key)
+    hit = plan is not None
     # A forced variant discards the planner's pick, so never pay a timed
     # sweep inside the scope — the pin exists to skip planning costs.
+    # Either degrade (a variant pin, an analytic-only kind, a dirty trace)
+    # is recorded as a plan.degrade event AND — for fresh plans — on the
+    # plan's own degrade_reason, so wisdom files say why they are ESTIMATE.
+    degrade = None
+    if mode == "measure" and (plan is None or plan.mode != "measure"):
+        if cfg.variant is not None:
+            degrade = "forced_variant"
+        elif kind in _ESTIMATE_ONLY_KINDS:
+            degrade = "estimate_only_kind"
     want_measure = (
         mode == "measure"
-        and cfg.variant is None
-        and kind not in _ESTIMATE_ONLY_KINDS
+        and degrade is None
         and (plan is None or plan.mode != "measure")
     )
-    if want_measure and _trace_safe():
+    measured = False
+    if want_measure and not _trace_safe():
+        degrade = "trace_not_clean"
+        want_measure = False
+    if degrade is not None:
+        _degrade_event(key, "measure", "estimate", degrade)
+    if want_measure:
         plan = cache.put(measure_plan(key))
+        measured = True
         if cache.path:
             cache.save()
     elif plan is None:
@@ -202,13 +284,21 @@ def resolve_call(
         # and a whole-file save here could clobber wisdom another process
         # measured into the same file after we loaded it (it would also put
         # file I/O inside jit traces). Only MEASURE results earn a write.
-        plan = cache.put(estimate_plan(key))
+        fresh = estimate_plan(key)
+        if degrade is not None:
+            fresh = dataclasses.replace(fresh, degrade_reason=degrade)
+        plan = cache.put(fresh)
     if cfg.variant is not None and cfg.variant != plan.variant:
         # The key (and therefore plan.precision) already carries the scoped
         # precision; only the engine choice itself can be forced.
-        return dataclasses.replace(
-            plan, variant=cfg.variant, mode="forced", measured_us=None
+        plan = dataclasses.replace(
+            plan, variant=cfg.variant, mode="forced", measured_us=None,
+            degrade_reason=degrade,
         )
+        _resolve_event("resolve_call", key, mode, "forced", plan, cache)
+        return plan
+    outcome = "measured" if measured else ("hit" if hit else "miss")
+    _resolve_event("resolve_call", key, mode, outcome, plan, cache)
     return plan
 
 

@@ -442,16 +442,35 @@ def _measure_plan_impl(
     iters: int,
     timings_out: Optional[Dict[str, float]],
 ) -> FFTPlan:
+    from repro import obs  # lazy: keep autotune importable without obs users
+
     x = _measure_input(key)
     best: Optional[Tuple[Tuple[str, int], float]] = None
-    for (variant, unroll), fn in _candidate_runners(key).items():
-        us = _time_us(fn, x, warmup=warmup, iters=iters)
-        label = variant if unroll == 1 else f"{variant}/unroll={unroll}"
-        if timings_out is not None:
-            timings_out[label] = us
-        if best is None or us < best[1]:
-            best = ((variant, unroll), us)
-    (variant, unroll), us = best
+    timings: Dict[str, float] = {}
+    # One span for the whole sweep (it is the expensive planner action —
+    # under xfft.config(observe=True) it lands in XLA profiles too), with
+    # every candidate's median attached to the emitted event.
+    with obs.span(
+        "plan.measure",
+        kind=key.kind,
+        shape=key.shape,
+        dtype=key.dtype,
+        direction=key.direction,
+        precision=key.precision,
+    ) as out:
+        for (variant, unroll), fn in _candidate_runners(key).items():
+            us = _time_us(fn, x, warmup=warmup, iters=iters)
+            label = variant if unroll == 1 else f"{variant}/unroll={unroll}"
+            timings[label] = us
+            if timings_out is not None:
+                timings_out[label] = us
+            if best is None or us < best[1]:
+                best = ((variant, unroll), us)
+        (variant, unroll), us = best
+        out["chosen"] = variant
+        out["chosen_us"] = us
+        out["candidates"] = len(timings)
+        out["timings"] = dict(timings)
     return FFTPlan(
         key=key,
         variant=variant,

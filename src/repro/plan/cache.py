@@ -3,20 +3,30 @@
 FFTW's wisdom files are the precedent: tuning is expensive (MEASURE jits
 and times every candidate), so the result is remembered per problem key.
 Keys embed :data:`repro.plan.plan.PLAN_SCHEMA_VERSION`, so bumping the
-schema orphans stale entries instead of mis-deserialising them — load
-simply drops keys whose version prefix doesn't match.
+schema orphans stale entries instead of mis-deserialising them.
+
+Every load is *accounted for*: :meth:`PlanCache.load` returns a
+:class:`LoadReport` saying how many entries were kept and how many were
+dropped per reason (stale schema prefix, malformed plan dict, key/value
+mismatch), emits a ``plan.cache.load`` event, and bumps the matching
+``repro.obs`` counters — a fleet process that warm-starts from shipped
+wisdom can confirm through :func:`repro.xfft.report` that the file
+actually loaded instead of silently tuning from scratch.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
+import logging
 import os
 import tempfile
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
+from repro import obs
 from repro.plan.plan import PLAN_SCHEMA_VERSION, FFTPlan, ProblemKey
 
-__all__ = ["PlanCache", "default_cache", "reset_default_cache"]
+__all__ = ["LoadReport", "PlanCache", "default_cache", "reset_default_cache"]
 
 #: Environment variable naming the on-disk cache file for the process-wide
 #: default cache. Unset -> the default cache is memory-only.
@@ -24,13 +34,53 @@ CACHE_ENV_VAR = "REPRO_PLAN_CACHE"
 
 _FILE_FORMAT = 1
 
+_log = logging.getLogger("repro.plan.cache")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadReport:
+    """Accounting for one :meth:`PlanCache.load`: kept vs dropped-by-reason.
+
+    kept         — entries merged into the cache.
+    stale_schema — dropped: cache-key version prefix != current schema.
+    malformed    — dropped: plan dict failed to deserialise.
+    key_mismatch — dropped: stored key and plan's own key disagree.
+    file_error   — the whole file was unreadable (missing / not JSON);
+                   ``None`` when the file parsed.
+    """
+
+    kept: int = 0
+    stale_schema: int = 0
+    malformed: int = 0
+    key_mismatch: int = 0
+    file_error: Optional[str] = None
+
+    @property
+    def dropped(self) -> int:
+        return self.stale_schema + self.malformed + self.key_mismatch
+
+    def __add__(self, other: "LoadReport") -> "LoadReport":
+        return LoadReport(
+            kept=self.kept + other.kept,
+            stale_schema=self.stale_schema + other.stale_schema,
+            malformed=self.malformed + other.malformed,
+            key_mismatch=self.key_mismatch + other.key_mismatch,
+            file_error=other.file_error or self.file_error,
+        )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
 
 class PlanCache:
     """Maps ``ProblemKey.cache_key()`` strings to :class:`FFTPlan`.
 
     ``path`` (optional) backs the cache with a JSON file: it is loaded at
-    construction and rewritten atomically by :meth:`save`. Hit/miss
-    counters let benchmarks assert "second run re-tunes nothing".
+    construction and rewritten atomically by :meth:`save`. Aggregate
+    hit/miss counters plus per-key hit counts let benchmarks assert
+    "second run re-tunes nothing" and let ``repro.xfft.report`` show
+    which wisdom entries actually serve traffic; :attr:`load_report`
+    accumulates the accounting of every :meth:`load`.
     """
 
     def __init__(self, path: Optional[str] = None, autoload: bool = True):
@@ -38,6 +88,8 @@ class PlanCache:
         self.path = path
         self.hits = 0
         self.misses = 0
+        self.key_hits: Dict[str, int] = {}
+        self.load_report: Optional[LoadReport] = None
         if path and autoload and os.path.exists(path):
             self.load(path)
 
@@ -48,11 +100,13 @@ class PlanCache:
         return key.cache_key() in self._plans
 
     def get(self, key: ProblemKey) -> Optional[FFTPlan]:
-        plan = self._plans.get(key.cache_key())
+        ck = key.cache_key()
+        plan = self._plans.get(ck)
         if plan is None:
             self.misses += 1
         else:
             self.hits += 1
+            self.key_hits[ck] = self.key_hits.get(ck, 0) + 1
         return plan
 
     def put(self, plan: FFTPlan) -> FFTPlan:
@@ -61,8 +115,19 @@ class PlanCache:
 
     def clear(self) -> None:
         self._plans.clear()
+        self.key_hits.clear()
         self.hits = 0
         self.misses = 0
+        self.load_report = None
+
+    def entries(self) -> Tuple[Tuple[str, FFTPlan], ...]:
+        """(cache_key, plan) pairs, sorted by key — the introspection
+        surface ``repro.xfft.report`` renders."""
+        return tuple(sorted(self._plans.items()))
+
+    def hit_count(self, cache_key: str) -> int:
+        """How many :meth:`get` hits this entry has served."""
+        return self.key_hits.get(cache_key, 0)
 
     # ------------------------------ persistence ------------------------------
 
@@ -86,13 +151,18 @@ class PlanCache:
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+        obs.emit("plan.cache.save", path=path, entries=len(self._plans))
         return path
 
-    def load(self, path: Optional[str] = None) -> int:
-        """Merge plans from ``path``; returns how many entries were kept.
+    def load(self, path: Optional[str] = None) -> LoadReport:
+        """Merge plans from ``path``; returns the kept/dropped accounting.
 
-        Entries from other schema versions (key prefix mismatch) and
-        malformed entries are silently dropped — a cache is a cache.
+        Entries from other schema versions (key prefix mismatch),
+        malformed entries and key/value disagreements are dropped — but
+        *counted*, not silent: the :class:`LoadReport` is returned,
+        accumulated on :attr:`load_report`, emitted as a
+        ``plan.cache.load`` event and surfaced through the
+        ``plan.cache.load.*`` obs counters.
         """
         path = path or self.path
         if not path:
@@ -100,22 +170,52 @@ class PlanCache:
         try:
             with open(path) as f:
                 payload = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return 0
+        except (OSError, json.JSONDecodeError) as e:
+            return self._account_load(path, LoadReport(file_error=str(e)))
         prefix = f"v{PLAN_SCHEMA_VERSION}|"
-        kept = 0
+        kept = stale = malformed = mismatch = 0
         for key, plan_dict in payload.get("plans", {}).items():
             if not key.startswith(prefix):
+                stale += 1
                 continue
             try:
                 plan = FFTPlan.from_dict(plan_dict)
             except (KeyError, TypeError, ValueError):
+                malformed += 1
                 continue
             if plan.key.cache_key() != key:
+                mismatch += 1
                 continue  # key/value disagree — do not trust the entry
             self._plans[key] = plan
             kept += 1
-        return kept
+        report = LoadReport(
+            kept=kept,
+            stale_schema=stale,
+            malformed=malformed,
+            key_mismatch=mismatch,
+        )
+        return self._account_load(path, report)
+
+    def _account_load(self, path: str, report: LoadReport) -> LoadReport:
+        self.load_report = (
+            report if self.load_report is None else self.load_report + report
+        )
+        obs.emit(
+            "plan.cache.load",
+            path=path,
+            kept=report.kept,
+            stale_schema=report.stale_schema,
+            malformed=report.malformed,
+            key_mismatch=report.key_mismatch,
+            file_error=report.file_error,
+        )
+        obs.count("plan.cache.load.kept", report.kept)
+        obs.count("plan.cache.load.stale_schema", report.stale_schema)
+        obs.count("plan.cache.load.malformed", report.malformed)
+        obs.count("plan.cache.load.key_mismatch", report.key_mismatch)
+        if report.file_error is not None:
+            obs.count("plan.cache.load.file_error")
+        return report
 
 
 _DEFAULT: Optional[PlanCache] = None
@@ -125,11 +225,25 @@ def default_cache() -> PlanCache:
     """Process-wide cache used by ``variant="auto"`` resolution.
 
     Backed by the file named in ``$REPRO_PLAN_CACHE`` when set, else
-    memory-only.
+    memory-only. The first touch emits a ``plan.cache.attached`` event
+    (path + entries kept from the wisdom file) and logs it, so a fleet
+    process can confirm its shipped wisdom actually loaded — the env var
+    is read exactly once per process, and this is the record of what it
+    resolved to.
     """
     global _DEFAULT
     if _DEFAULT is None:
-        _DEFAULT = PlanCache(path=os.environ.get(CACHE_ENV_VAR) or None)
+        path = os.environ.get(CACHE_ENV_VAR) or None
+        _DEFAULT = PlanCache(path=path)
+        obs.emit(
+            "plan.cache.attached",
+            path=path,
+            entries=len(_DEFAULT),
+            source=CACHE_ENV_VAR if path else "memory",
+        )
+        _log.info(
+            "default plan cache attached: path=%s entries=%d", path, len(_DEFAULT)
+        )
     return _DEFAULT
 
 

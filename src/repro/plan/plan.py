@@ -198,6 +198,13 @@ class FFTPlan:
                     tile whose fused-kernel working set stays inside VMEM
                     with the best compute-per-output ratio; ``None`` for
                     every other kind.
+      degrade_reason — why a MEASURE request produced this ESTIMATE plan
+                    (``"estimate_only_kind"`` for pencil/oaconv problems,
+                    ``"trace_not_clean"`` when resolution happened inside
+                    a jit trace, ``"forced_variant"`` under a scoped
+                    variant pin); ``None`` when nothing degraded. Persists
+                    into wisdom files, so a shipped cache says *why* an
+                    entry never tuned.
     """
 
     key: ProblemKey
@@ -210,6 +217,7 @@ class FFTPlan:
     est_time_s: float = 0.0            # roofline-model time (ESTIMATE)
     measured_us: Optional[float] = None  # winning candidate time (MEASURE)
     tile: Optional[Tuple[int, int]] = None  # oaconv2d FFT tile (TH, TW)
+    degrade_reason: Optional[str] = None  # why measure degraded to estimate
 
     def __post_init__(self):
         from repro.engines import has_engine, registered_variants  # lazy
@@ -238,6 +246,7 @@ class FFTPlan:
             "est_time_s": self.est_time_s,
             "measured_us": self.measured_us,
             "tile": None if self.tile is None else list(self.tile),
+            "degrade_reason": self.degrade_reason,
         }
 
     @classmethod
@@ -254,6 +263,7 @@ class FFTPlan:
             est_time_s=float(d["est_time_s"]),
             measured_us=None if d.get("measured_us") is None else float(d["measured_us"]),
             tile=None if tile is None else (int(tile[0]), int(tile[1])),
+            degrade_reason=d.get("degrade_reason"),
         )
 
 

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class Request:
@@ -72,6 +74,7 @@ class ServeEngine:
         pending = list(queue)
         active: list[Request | None] = [None] * self.batch
         results: list[Request] = []
+        obs.emit("serve.queue", service="lm", depth=len(pending), slots=self.batch)
         while pending or any(a is not None for a in active):
             for i in range(self.batch):
                 if active[i] is None and pending:
@@ -85,11 +88,19 @@ class ServeEngine:
             for i, a in enumerate(active):
                 if a is not None:
                     toks[i, s - len(a.prompt):] = a.prompt
-            outs = self.generate(
-                [toks[i] for i in range(self.batch)],
-                max_new=max(a.max_new for a in live),
-                extras=extras,
-            )
+            with obs.span(
+                "serve.batch",
+                service="lm",
+                batch=len(live),
+                slots=self.batch,
+                queued=len(pending),
+                prompt_len=s,
+            ):
+                outs = self.generate(
+                    [toks[i] for i in range(self.batch)],
+                    max_new=max(a.max_new for a in live),
+                    extras=extras,
+                )
             for i, a in enumerate(active):
                 if a is not None:
                     a.out = outs[i][: a.max_new]
@@ -161,6 +172,10 @@ class SpectrumService:
                 raise ValueError(f"request {i}: expected a (H, W) frame, got {frame.shape}")
             real = not np.iscomplexobj(frame)
             groups.setdefault((frame.shape, real), []).append(i)
+        obs.emit(
+            "serve.queue", service="spectrum", depth=len(requests),
+            groups=len(groups),
+        )
         for (shape, real), idxs in groups.items():
             batch = np.stack([np.asarray(requests[i].frame) for i in idxs])
             kind = "rfft2d" if real else "fft2d"
@@ -169,7 +184,11 @@ class SpectrumService:
             # frame geometry, not on how many requests happened to arrive,
             # so varying batch sizes never trigger a re-tune.
             plan = self._plan_for(kind, shape, dtype)
-            out = np.asarray(execute(plan, jnp.asarray(batch)))
+            with obs.span(
+                "serve.batch", service="spectrum", kind=kind, shape=shape,
+                batch=len(idxs), variant=plan.variant,
+            ):
+                out = np.asarray(execute(plan, jnp.asarray(batch)))
             for j, i in enumerate(idxs):
                 requests[i].spectrum = out[j]
                 requests[i].done = True

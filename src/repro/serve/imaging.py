@@ -26,6 +26,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.serve.engine import SpectrumRequest, SpectrumService
 
 __all__ = ["RegistrationRequest", "ConvolutionRequest", "ImagingService"]
@@ -101,6 +102,14 @@ class ImagingService(SpectrumService):
                     f"request {i}: expected SpectrumRequest, "
                     f"RegistrationRequest or ConvolutionRequest, got {type(r)!r}"
                 )
+        obs.emit(
+            "serve.queue",
+            service="imaging",
+            depth=len(requests),
+            spectra=len(spectra),
+            registrations=len(registrations),
+            convolutions=len(convolutions),
+        )
         if spectra:
             super().serve(spectra)
         if registrations:
@@ -133,9 +142,13 @@ class ImagingService(SpectrumService):
             )
             refs = jnp.asarray(np.stack([np.asarray(r.ref) for r in members]))
             movs = jnp.asarray(np.stack([np.asarray(r.mov) for r in members]))
-            shifts = np.asarray(
-                register_phase_correlation(refs, movs, upsample_factor=upsample)
-            )
+            with obs.span(
+                "serve.batch", service="registration", shape=shape,
+                batch=len(members), upsample=upsample,
+            ):
+                shifts = np.asarray(
+                    register_phase_correlation(refs, movs, upsample_factor=upsample)
+                )
             for r, shift in zip(members, shifts):
                 r.shift = shift
                 r.done = True
@@ -162,9 +175,13 @@ class ImagingService(SpectrumService):
             )
             images = jnp.asarray(np.stack([np.asarray(r.image) for r in members]))
             kernels = jnp.asarray(np.stack([np.asarray(r.kernel) for r in members]))
-            out = np.asarray(
-                oaconvolve2(images, kernels, mode=mode, tile=plan.tile)
-            )
+            with obs.span(
+                "serve.batch", service="convolution", shape=ishape,
+                kernel=kshape, batch=len(members), tile=plan.tile,
+            ):
+                out = np.asarray(
+                    oaconvolve2(images, kernels, mode=mode, tile=plan.tile)
+                )
             for r, res in zip(members, out):
                 r.out = res
                 r.done = True

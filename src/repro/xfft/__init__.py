@@ -40,6 +40,7 @@ deprecation shims that warn once and delegate here.
 """
 
 from repro.xfft._config import XFFTConfig, config, get_config
+from repro.xfft._report import report, report_data
 from repro.xfft._transforms import (
     fft,
     fft2,
@@ -82,5 +83,7 @@ __all__ = [
     "rfftfreq",
     "config",
     "get_config",
+    "report",
+    "report_data",
     "XFFTConfig",
 ]

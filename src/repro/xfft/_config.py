@@ -26,8 +26,9 @@ from __future__ import annotations
 
 import contextvars
 import dataclasses
-from typing import Optional, Sequence, Tuple, Union
+from typing import Any, Optional, Sequence, Tuple, Union
 
+from repro import obs
 from repro.engines import (
     get_engine,
     has_engine,
@@ -73,6 +74,14 @@ class XFFTConfig:
                 process-wide default cache (``$REPRO_PLAN_CACHE``). Pass
                 ``""`` to :func:`config` to clear an inherited directory
                 (``None`` means "inherit", like every other field).
+    observe   — observability policy for calls in scope: a
+                :class:`repro.obs.Trace` collects every event emitted in
+                scope into that trace; ``True`` turns spans into
+                ``jax.profiler.TraceAnnotation`` regions so planner/engine
+                work lands in XLA profiles; ``False`` (the default)
+                disables both. ``repro.obs.capture()`` is the usual
+                spelling for getting a trace back; this field exists so a
+                long-lived scope (a service process) can stream into one.
     """
 
     variant: Optional[str] = None
@@ -80,6 +89,7 @@ class XFFTConfig:
     precision: str = "single"
     cache_dir: Optional[str] = None
     backends: Tuple[str, ...] = ()
+    observe: Any = False
 
 
 _ACTIVE: contextvars.ContextVar[XFFTConfig] = contextvars.ContextVar(
@@ -132,8 +142,14 @@ class config:
         precision: Optional[str] = None,
         cache_dir: Optional[str] = None,
         backend: Union[str, Sequence[str], None] = None,
+        observe: Any = None,
     ):
         prev = _ACTIVE.get()
+        if observe is not None and not isinstance(observe, (bool, obs.Trace)):
+            raise ValueError(
+                f"observe must be a repro.obs.Trace, True (profiler "
+                f"annotations), False (off) or None (inherit); got {observe!r}"
+            )
         clear_variant = variant == "auto"  # "auto" clears an outer override
         if clear_variant:
             variant = None
@@ -169,6 +185,7 @@ class config:
                 cache_dir if cache_dir is not None else prev.cache_dir
             ),
             backends=backends if backends is not None else prev.backends,
+            observe=observe if observe is not None else prev.observe,
         )
         # A forced variant must be CAPABLE of the scope's constraints —
         # otherwise config(precision="double", variant="stockham") would
@@ -190,6 +207,9 @@ class config:
                     "force a different variant"
                 )
         self._token = _ACTIVE.set(merged)
+        # Only an EXPLICIT observe= pushes obs scope state: inheriting must
+        # not re-push (a Trace pushed twice would record every event twice).
+        self._obs_tokens = obs.push_observe(observe) if observe is not None else None
 
     def __enter__(self) -> "config":
         return self
@@ -199,6 +219,9 @@ class config:
 
     def restore(self) -> None:
         """Undo this call's overrides (automatic when used as a context)."""
+        if self._obs_tokens is not None:
+            obs.pop_observe(self._obs_tokens)
+            self._obs_tokens = None
         if self._token is not None:
             _ACTIVE.reset(self._token)
             self._token = None

@@ -1,0 +1,129 @@
+"""Live plan-cache + counter introspection: ``xfft.report()``.
+
+FFTW answers "what did the planner learn?" with ``fftw_export_wisdom``;
+this module is that answer for the repo. :func:`report_data` assembles a
+structured snapshot of the wisdom cache the active scope resolves
+against — per-key engine choice, planning mode, tuned times, hit counts,
+the kept/dropped accounting of every wisdom-file load — plus every
+process-wide ``repro.obs`` counter; :func:`report` renders it for
+humans. Neither touches a device or mutates any state: reporting a
+service must never replan it.
+"""
+
+from __future__ import annotations
+
+from repro import obs
+
+__all__ = ["report", "report_data"]
+
+
+def report_data(cache=None) -> dict:
+    """Structured snapshot of the active scope's plan cache + obs counters.
+
+    ``cache`` (a :class:`repro.plan.PlanCache`) overrides the scope's
+    cache — the active ``config(cache_dir=...)`` wisdom cache when set,
+    the process-wide default cache otherwise.
+    """
+    # Lazy imports: report is a diagnostic surface; the obs/record layer
+    # must stay importable without the planner.
+    from repro.plan.api import _cache_for_dir
+    from repro.plan.cache import default_cache
+    from repro.xfft._config import get_config
+
+    cfg = get_config()
+    if cache is None:
+        cache = _cache_for_dir(cfg.cache_dir) if cfg.cache_dir else default_cache()
+    entries = []
+    for key_str, plan in cache.entries():
+        k = plan.key
+        entries.append({
+            "key": key_str,
+            "kind": k.kind,
+            "direction": k.direction,
+            "shape": list(k.shape),
+            "dtype": k.dtype,
+            "precision": k.precision,
+            "backend": k.backend,
+            "variant": plan.variant,
+            "mode": plan.mode,
+            "est_time_s": plan.est_time_s,
+            "measured_us": plan.measured_us,
+            "tile": None if plan.tile is None else list(plan.tile),
+            "degrade_reason": plan.degrade_reason,
+            "hits": cache.hit_count(key_str),
+        })
+    return {
+        "config": {
+            "variant": cfg.variant,
+            "mode": cfg.mode,
+            "precision": cfg.precision,
+            "backends": list(cfg.backends),
+            "cache_dir": cfg.cache_dir,
+        },
+        "cache": {
+            "path": cache.path,
+            "entries": entries,
+            "hits": cache.hits,
+            "misses": cache.misses,
+            "load": (
+                None if cache.load_report is None
+                else cache.load_report.to_dict()
+            ),
+        },
+        "counters": obs.counters(),
+    }
+
+
+def _fmt_time(entry: dict) -> str:
+    if entry["measured_us"] is not None:
+        return f"measured={entry['measured_us']:.1f}us"
+    return f"est={entry['est_time_s'] * 1e6:.1f}us"
+
+
+def report(cache=None) -> str:
+    """Human-readable plan-cache + counter report for the active scope.
+
+    One line per wisdom entry (problem identity -> chosen engine, planning
+    mode, tuned time, hit count, degrade reason when a MEASURE request
+    fell back to ESTIMATE), the load accounting of any wisdom file, and
+    every live obs counter.
+    """
+    d = report_data(cache)
+    cfg, c = d["config"], d["cache"]
+    scope = f"mode={cfg['mode']} precision={cfg['precision']}"
+    if cfg["variant"]:
+        scope += f" variant={cfg['variant']}"
+    if cfg["backends"]:
+        scope += f" backends={','.join(cfg['backends'])}"
+    lines = [
+        f"repro.xfft report ({scope})",
+        f"plan cache: path={c['path'] or 'memory'}  entries={len(c['entries'])}"
+        f"  hits={c['hits']}  misses={c['misses']}",
+    ]
+    for e in c["entries"]:
+        shape = "x".join(str(s) for s in e["shape"])
+        problem = f"{e['kind']} {e['direction']} {shape} {e['dtype']}"
+        line = (
+            f"  {problem:<40} -> {e['variant']:<12} {e['mode']:<8} "
+            f"{_fmt_time(e):<20} hits={e['hits']}"
+        )
+        if e["degrade_reason"]:
+            line += f"  degraded[{e['degrade_reason']}]"
+        if e["tile"]:
+            line += f"  tile={e['tile'][0]}x{e['tile'][1]}"
+        lines.append(line)
+    if c["load"] is not None:
+        ld = c["load"]
+        lines.append(
+            f"wisdom load: kept={ld['kept']} stale_schema={ld['stale_schema']}"
+            f" malformed={ld['malformed']} key_mismatch={ld['key_mismatch']}"
+            + (f" file_error={ld['file_error']}" if ld["file_error"] else "")
+        )
+    counters = d["counters"]
+    if counters:
+        lines.append("counters:")
+        width = max(len(name) for name in counters)
+        lines.extend(
+            f"  {name:<{width}}  {value}" for name, value in counters.items()
+        )
+    return "\n".join(lines)

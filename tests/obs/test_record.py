@@ -1,0 +1,151 @@
+"""The obs substrate itself: events, spans, counters, capture scoping."""
+
+import threading
+
+import pytest
+
+import repro.xfft as xfft
+from repro import obs
+
+
+@pytest.fixture(autouse=True)
+def _fresh_counters():
+    obs.reset_counters()
+    yield
+    obs.reset_counters()
+
+
+def test_disabled_emit_is_a_noop_but_counts():
+    assert not obs.enabled()
+    assert obs.emit("unit.test", a=1) is None      # no scope -> no Event
+    assert obs.counters()["unit.test"] == 1        # ...but always counted
+    obs.emit("unit.test")
+    assert obs.counters()["unit.test"] == 2
+
+
+def test_capture_collects_and_restores():
+    with obs.capture() as trace:
+        assert obs.enabled()
+        ev = obs.emit("unit.test", x=7)
+        assert ev is not None and ev["x"] == 7
+    assert not obs.enabled()
+    assert [e.name for e in trace] == ["unit.test"]
+    assert trace.first("unit.test").get("x") == 7
+    assert trace.first("unit.test").get("missing", "d") == "d"
+
+
+def test_nested_scopes_inner_window_outer_sees_all():
+    with obs.capture() as outer:
+        obs.emit("before.inner")
+        with obs.capture() as inner:
+            obs.emit("inside")
+        obs.emit("after.inner")
+    assert [e.name for e in inner] == ["inside"]
+    assert [e.name for e in outer] == ["before.inner", "inside", "after.inner"]
+
+
+def test_select_glob_first_counts():
+    with obs.capture() as t:
+        obs.emit("plan.resolve", outcome="miss")
+        obs.emit("plan.resolve", outcome="hit")
+        obs.emit("plan.measure")
+        obs.emit("engine.apply")
+    assert len(t.select("plan.resolve")) == 2
+    assert len(t.select("plan.*")) == 3
+    assert t.first("plan.resolve")["outcome"] == "miss"
+    assert t.first("nope") is None
+    assert t.counts() == {"plan.resolve": 2, "plan.measure": 1,
+                          "engine.apply": 1}
+    assert "plan.measure" in t.summary()
+
+
+def test_span_times_and_merges_extra_fields():
+    with obs.capture() as t:
+        with obs.span("unit.region", fixed="f") as out:
+            out["chosen"] = "radix4"
+    (ev,) = t.select("unit.region")
+    assert ev["fixed"] == "f"
+    assert ev["chosen"] == "radix4"
+    assert ev["duration_us"] >= 0.0
+
+
+def test_span_disabled_fast_path_counts_only():
+    with obs.span("unit.region") as out:
+        out["ignored"] = 1                         # dict is yielded but dropped
+    assert obs.counters()["unit.region"] == 1
+
+
+def test_capture_profile_toggles_profiling_flag():
+    assert not obs.profiling()
+    with obs.capture(profile=True):
+        assert obs.profiling()
+        with obs.capture(profile=False):
+            assert not obs.profiling()
+        assert obs.profiling()
+    assert not obs.profiling()
+
+
+def test_threads_do_not_observe_each_other():
+    """A thread spawned inside a capture scope starts with a fresh
+    contextvars context: its events never land in this thread's trace,
+    and its own scopes work independently."""
+    seen_in_thread = {}
+
+    def worker():
+        seen_in_thread["enabled_on_entry"] = obs.enabled()
+        with obs.capture() as t:
+            obs.emit("thread.local")
+        seen_in_thread["own_events"] = [e.name for e in t]
+
+    with obs.capture() as trace:
+        th = threading.Thread(target=worker)
+        th.start()
+        th.join()
+        obs.emit("main.local")
+    assert seen_in_thread["enabled_on_entry"] is False
+    assert seen_in_thread["own_events"] == ["thread.local"]
+    assert [e.name for e in trace] == ["main.local"]
+    # counters ARE process-wide: both threads' emissions land there
+    assert obs.counters()["thread.local"] == 1
+    assert obs.counters()["main.local"] == 1
+
+
+# --------------------- xfft.config(observe=...) hooks ---------------------
+
+
+def test_config_observe_trace_streams_events():
+    sink = obs.Trace()
+    with xfft.config(observe=sink):
+        obs.emit("scoped.event", k=1)
+    obs.emit("outside.event")
+    assert [e.name for e in sink] == ["scoped.event"]
+
+
+def test_config_observe_false_silences_enclosing_capture():
+    with obs.capture() as outer:
+        obs.emit("kept")
+        with xfft.config(observe=False):
+            obs.emit("dropped")
+        obs.emit("kept.again")
+    assert [e.name for e in outer] == ["kept", "kept.again"]
+
+
+def test_config_observe_inherits_without_double_recording():
+    """An inner scope that does NOT set observe= must not re-push the
+    inherited trace — every event would be recorded twice."""
+    sink = obs.Trace()
+    with xfft.config(observe=sink):
+        with xfft.config(mode="estimate"):         # inherits observe
+            obs.emit("once")
+    assert len(sink.select("once")) == 1
+
+
+def test_config_observe_true_scopes_profiling():
+    with xfft.config(observe=True):
+        assert obs.profiling()
+    assert not obs.profiling()
+
+
+def test_config_observe_rejects_junk():
+    with pytest.raises(ValueError, match="observe"):
+        xfft.config(observe="yes")
