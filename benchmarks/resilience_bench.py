@@ -1,0 +1,206 @@
+"""Resilience overhead + failover acceptance: BENCH_resilience.json.
+
+Two gates, both about trusting the new ``repro.resilience`` layer:
+
+1. **Overhead, chaos disabled** — the resilience seams (fault-hook
+   contextvar reads, breaker fast paths, the ladder wrapper) ride on
+   every transform call. The cached hot path with NO FaultPlan in scope
+   (the production default) must stay within ``--gate-pct`` (default 3%)
+   of the same loop under an armed-but-never-matching FaultPlan — i.e.
+   the fully-exercised consultation path. Reps are interleaved with
+   alternating order so clock drift and position bias hit both equally.
+
+2. **Failover flow, proven by events** — with a FaultPlan injecting a
+   deterministic failure into the first-choice engine, ``xfft.fft2``
+   must return numpy-parity output, emit ``resilience.failover`` naming
+   the quarantined engine, serve the next call from the fallback
+   (``plan.resolve`` outcome ``"quarantined"``, no second injection),
+   and close the breaker after cooldown via a successful half-open
+   probe — all asserted from the obs event stream. The timed failover
+   call reports how much a one-rung degrade costs over the healthy path.
+
+  PYTHONPATH=src python benchmarks/resilience_bench.py --size 256
+  PYTHONPATH=src python -m benchmarks.run resilience
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.xfft as xfft
+from repro import obs
+from repro.plan import resolve_call
+from repro.resilience import FaultPlan, FaultSpec, configure, reset
+
+try:  # python -m benchmarks.resilience_bench (repo root on sys.path)
+    from benchmarks.common import emit
+except ImportError:  # python benchmarks/resilience_bench.py
+    from common import emit
+
+
+def _frame(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        (rng.standard_normal((n, n)) + 1j * rng.standard_normal((n, n)))
+        .astype(np.complex64)
+    )
+
+
+def _hot_loop_us(x, iters: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(xfft.fft2(x))
+    return (time.perf_counter() - t0) * 1e6 / iters
+
+
+def bench_overhead(n: int, iters: int, reps: int) -> dict:
+    """Cached hot loop: chaos off (production) vs armed-no-match FaultPlan."""
+    x = _frame(n)
+    jax.block_until_ready(xfft.fft2(x))  # plan cached, kernels compiled
+    # Armed plan whose match can never hit: every seam consultation walks
+    # the full spec-matching path and rejects — the worst in-scope cost
+    # short of actually firing.
+    armed = FaultPlan(
+        FaultSpec("engine.apply", match={"engine": "no_such_engine"}),
+    )
+    disabled, in_scope = [], []
+    for rep in range(reps):
+        first_armed = bool(rep % 2)
+        if first_armed:
+            with xfft.config(faults=armed):
+                in_scope.append(_hot_loop_us(x, iters))
+            disabled.append(_hot_loop_us(x, iters))
+        else:
+            disabled.append(_hot_loop_us(x, iters))
+            with xfft.config(faults=armed):
+                in_scope.append(_hot_loop_us(x, iters))
+    disabled.sort()
+    in_scope.sort()
+    base_us = disabled[len(disabled) // 2]
+    armed_us = in_scope[len(in_scope) // 2]
+    return {
+        "size": n,
+        "iters": iters,
+        "reps": reps,
+        "disabled_us": round(base_us, 2),
+        "armed_no_match_us": round(armed_us, 2),
+        "overhead_pct": round((armed_us - base_us) / base_us * 100.0, 3),
+    }
+
+
+def bench_failover(n: int) -> dict:
+    """The PR's acceptance flow, judged by the event stream, with timing."""
+    clock = [0.0]
+    configure(cooldown_s=30.0, clock=lambda: clock[0])
+    try:
+        x = _frame(n, seed=1)
+        first = resolve_call("fft2d", (n, n)).variant
+        reset()
+        want = np.fft.fft2(np.asarray(x))
+        jax.block_until_ready(xfft.fft2(x))  # compile the healthy path
+        healthy_us = _hot_loop_us(x, 5)
+        # times=2: one unmeasured failover to compile the fallback rung,
+        # then one timed failover on warm code.
+        plan = FaultPlan(
+            FaultSpec(
+                "engine.apply", mode="error", match={"engine": first}, times=2
+            )
+        )
+        with obs.capture() as trace, xfft.config(faults=plan):
+            y = xfft.fft2(x)                       # failover 1 (compiles)
+            np.testing.assert_allclose(np.asarray(y), want, rtol=1e-3, atol=1e-3)
+            reset()                                # re-admit the engine...
+            t0 = time.perf_counter()
+            y = jax.block_until_ready(xfft.fft2(x))  # failover 2 (timed)
+            failover_us = (time.perf_counter() - t0) * 1e6
+            np.testing.assert_allclose(np.asarray(y), want, rtol=1e-3, atol=1e-3)
+            xfft.fft2(x)                           # served from fallback
+            clock[0] += 31.0                       # cooldown passes
+            xfft.fft2(x)                           # half-open probe: closes
+        failovers = trace.select("resilience.failover")
+        outcomes = [e["outcome"] for e in trace.select("plan.resolve")]
+        states = [e["state"] for e in trace.select("resilience.breaker")]
+        ok = (
+            len(trace.select("resilience.fault")) == 2
+            and len(failovers) == 2
+            and all(e["engine"] == first and e["quarantined"] for e in failovers)
+            and outcomes.count("quarantined") >= 1
+            and states.count("open") == 2
+            and states[-2:] == ["half_open", "closed"]
+        )
+        return {
+            "size": n,
+            "first_choice": first,
+            "fallback": failovers[0]["next"] if failovers else None,
+            "healthy_us": round(healthy_us, 2),
+            "failover_us": round(failover_us, 2),
+            "failover_overhead_pct": round(
+                (failover_us - healthy_us) / healthy_us * 100.0, 1
+            ),
+            "resolve_outcomes": outcomes,
+            "breaker_states": states,
+            "ok": ok,
+        }
+    finally:
+        reset()
+        configure(clock=time.monotonic)
+
+
+def run() -> None:
+    """benchmarks.run entry point: default sweep, BENCH_resilience.json."""
+    main(["--out", "/tmp/BENCH_resilience.json"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--size", type=int, default=256,
+                    help="frame size N for the overhead loop (NxN)")
+    ap.add_argument("--failover-size", type=int, default=64,
+                    help="frame size for the failover acceptance flow")
+    ap.add_argument("--iters", type=int, default=30,
+                    help="hot-loop calls per rep")
+    ap.add_argument("--reps", type=int, default=7,
+                    help="interleaved disabled/armed reps (median)")
+    ap.add_argument("--gate-pct", type=float, default=3.0,
+                    help="max tolerated seam overhead (chaos off), percent")
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    args = ap.parse_args(argv)
+
+    overhead = bench_overhead(args.size, args.iters, args.reps)
+    failover = bench_failover(args.failover_size)
+    overhead_ok = overhead["overhead_pct"] < args.gate_pct
+    report = {
+        "backend": jax.default_backend(),
+        "gate_pct": args.gate_pct,
+        "overhead": overhead,
+        "overhead_ok": overhead_ok,
+        "failover": failover,
+        "failover_ok": failover["ok"],
+        "ok": overhead_ok and failover["ok"],
+    }
+    emit(
+        f"resilience_bench/hot_loop/{args.size}", overhead["disabled_us"],
+        f"overhead_pct={overhead['overhead_pct']}",
+    )
+    emit(
+        f"resilience_bench/failover/{args.failover_size}",
+        failover["failover_us"],
+        f"healthy_us={failover['healthy_us']}",
+    )
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

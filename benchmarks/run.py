@@ -11,9 +11,9 @@ from __future__ import annotations
 import sys
 
 from benchmarks import accuracy, fft_bench, imaging_bench, obs_bench
-from benchmarks import pencil_overlap, plan_autotune, table1_resources
-from benchmarks import table2_resources, table5_utilization, table6_delay
-from benchmarks import throughput
+from benchmarks import pencil_overlap, plan_autotune, resilience_bench
+from benchmarks import table1_resources, table2_resources, table5_utilization
+from benchmarks import table6_delay, throughput
 
 ALL = {
     "table1": table1_resources.run,
@@ -27,6 +27,7 @@ ALL = {
     "fft": fft_bench.run,
     "imaging": imaging_bench.run,
     "obs": obs_bench.run,
+    "resilience": resilience_bench.run,
 }
 
 

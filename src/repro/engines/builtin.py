@@ -113,6 +113,9 @@ def _register_builtin_engines() -> None:
             radix=radix,
             cost=cost,
             ops=_core_ops(name),
+            # stockham is the canonical always-works rung: pure jnp ops,
+            # every kind, no VMEM cliff — the degradation ladder's bottom.
+            reliable=(name == "stockham"),
         ), _protect=True)
     for name, radix, flop_scale in (("fused", 2, 1.0), ("fused_r4", 4, 0.85)):
         register_engine(EngineSpec(

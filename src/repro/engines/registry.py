@@ -83,6 +83,11 @@ class EngineSpec:
     dtypes             — canonical I/O dtype names, documentation-grade.
     radix              — butterfly radix (stage count = log_radix N).
     fused              — True for whole-transform-in-VMEM Pallas kernels.
+    reliable           — True marks an always-works degradation rung (plain
+                         XLA ops, no lowering cliffs): when the resilience
+                         quarantine would exclude every candidate for a
+                         problem, reliable engines come back regardless so
+                         the ladder always has a bottom.
     single_device_only — engine cannot take part in multi-device plans.
     requires_x64       — engine computes under ``jax.enable_x64``.
     working_set        — optional callback ``(ProblemKey) -> bytes|None``:
@@ -107,6 +112,7 @@ class EngineSpec:
     dtypes: Tuple[str, ...] = ("complex64", "float32")
     radix: int = 2
     fused: bool = False
+    reliable: bool = False
     single_device_only: bool = False
     requires_x64: bool = False
     working_set: Optional[Callable] = None

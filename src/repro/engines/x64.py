@@ -31,6 +31,9 @@ _KINDS = ("fft1d", "fft2d", "fft2d_stream", "rfft1d", "rfft2d")
     precisions=("double",),
     dtypes=("complex128", "float64"),
     requires_x64=True,
+    # The double ladder's always-works rung: jnp.fft under enable_x64,
+    # immune to quarantine exhaustion like stockham is for single.
+    reliable=True,
     cost=CostHints(traffic_factor=4.0, stage_overhead_s=0.8e-6),
 )
 def _reference_x64_ops(kind: str, direction: str):

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.core.fft1d import bit_reversal_permutation
+from repro.resilience import faults as _faults
 from repro.kernels.butterfly import butterfly_stage
 from repro.kernels.fft_radix2 import (
     _FFT2_WORKING_ARRAYS,
@@ -179,7 +180,9 @@ def fft2_kernel(x: jax.Array, *, radix: int = 2, interpret: bool | None = None) 
     re, im = _split(x)
     f, h, w, lead = _frames(x)
     re, im = re.reshape(f, h, w), im.reshape(f, h, w)
-    if fft2_fits_vmem(h, w):
+    if fft2_fits_vmem(h, w) and not _faults.vmem_exhausted(
+        "kernel.fused", kind="fft2d", h=h, w=w
+    ):
         yr, yi = fft2_fused(re, im, radix=radix, interpret=interpret)
     else:
         # Frame working set exceeds VMEM: row pass, materialised corner
@@ -220,7 +223,9 @@ def rfft2_kernel(x: jax.Array, *, radix: int = 2, interpret: bool | None = None)
     x = jnp.asarray(x).astype(jnp.float32)
     f, h, w, lead = _frames(x)
     xf = x.reshape(f, h, w)
-    if fft2_fits_vmem(h, w, arrays=_REAL2D_ARRAYS):
+    if fft2_fits_vmem(h, w, arrays=_REAL2D_ARRAYS) and not _faults.vmem_exhausted(
+        "kernel.fused", kind="rfft2d", h=h, w=w
+    ):
         yr, yi = rfft2_fused(xf, radix=radix, interpret=interpret)
     else:
         # Unfused failover: row rfft kernel, corner turn in HBM, column FFT.
@@ -252,7 +257,9 @@ def irfft2_kernel(y: jax.Array, *, radix: int = 2, interpret: bool | None = None
     f, h, half, lead = _frames(y)
     w = 2 * (half - 1)
     re, im = re.reshape(f, h, half), im.reshape(f, h, half)
-    if fft2_fits_vmem(h, w, arrays=_REAL2D_ARRAYS):
+    if fft2_fits_vmem(h, w, arrays=_REAL2D_ARRAYS) and not _faults.vmem_exhausted(
+        "kernel.fused", kind="irfft2d", h=h, w=w
+    ):
         out = irfft2_fused(re, im, radix=radix, interpret=interpret)
     else:
         # Column IFFT via the jnp engine (the odd f·(W/2+1) column batch

@@ -23,6 +23,8 @@ from repro import obs
 from repro.plan.autotune import estimate_plan, measure_plan
 from repro.plan.cache import PlanCache, default_cache
 from repro.plan.plan import FFTPlan, ProblemKey, problem_key
+from repro.resilience.breaker import quarantine
+from repro.resilience.ladder import run_plan
 
 __all__ = ["plan_fft", "execute", "resolve", "resolve_call"]
 
@@ -243,6 +245,13 @@ def resolve_call(
     3. A scoped ``variant=...`` override replaces the planned schedule
        (the returned plan is marked ``mode="forced"`` and never cached:
        forced choices are opinions, not wisdom).
+
+    Resilience: a cached plan whose engine is quarantined for this key
+    (``repro.resilience`` circuit breaker open after a failure) is NOT
+    served — the call re-resolves with quarantined engines excluded from
+    the candidate sweep (outcome ``"quarantined"``), and the fallback
+    plan is never written into the cache: wisdom must outlive the bench,
+    the workaround must not.
     """
     cfg = _active_config()
     if cache is None:
@@ -250,8 +259,13 @@ def resolve_call(
     key = problem_key(kind, shape, dtype, n_devices, direction, axes,
                       cfg.precision, cfg.backends)
     mode = mode if mode is not None else cfg.mode
+    breaker = quarantine()
     plan = cache.get(key)
     hit = plan is not None
+    quarantined = hit and breaker.excluded(plan.variant, key)
+    if quarantined:
+        plan = None  # re-resolve around the benched engine
+    affected = quarantined or breaker.affects(key)
     # A forced variant discards the planner's pick, so never pay a timed
     # sweep inside the scope — the pin exists to skip planning costs.
     # Either degrade (a variant pin, an analytic-only kind, a dirty trace)
@@ -263,10 +277,18 @@ def resolve_call(
             degrade = "forced_variant"
         elif kind in _ESTIMATE_ONLY_KINDS:
             degrade = "estimate_only_kind"
+        elif affected:
+            # Sweeping while an engine is benched would tune (and persist)
+            # wisdom over a temporarily reduced engine population.
+            degrade = "engine_quarantined"
     want_measure = (
         mode == "measure"
         and degrade is None
         and (plan is None or plan.mode != "measure")
+        # A measure_timeout plan means the sweep already hung once for
+        # this key; don't re-hang every call — plan_fft(force=True) is
+        # the explicit re-tune path.
+        and (plan is None or plan.degrade_reason != "measure_timeout")
     )
     measured = False
     if want_measure and not _trace_safe():
@@ -287,7 +309,10 @@ def resolve_call(
         fresh = estimate_plan(key)
         if degrade is not None:
             fresh = dataclasses.replace(fresh, degrade_reason=degrade)
-        plan = cache.put(fresh)
+        # Plans resolved under an active quarantine are workarounds, not
+        # wisdom: keep them out of the cache so the planned engine comes
+        # back the moment its breaker closes.
+        plan = fresh if affected else cache.put(fresh)
     if cfg.variant is not None and cfg.variant != plan.variant:
         # The key (and therefore plan.precision) already carries the scoped
         # precision; only the engine choice itself can be forced.
@@ -297,7 +322,12 @@ def resolve_call(
         )
         _resolve_event("resolve_call", key, mode, "forced", plan, cache)
         return plan
-    outcome = "measured" if measured else ("hit" if hit else "miss")
+    outcome = (
+        "quarantined" if quarantined
+        else "measured" if measured
+        else "hit" if hit
+        else "miss"
+    )
     _resolve_event("resolve_call", key, mode, outcome, plan, cache)
     return plan
 
@@ -323,29 +353,41 @@ def execute(plan: FFTPlan, x, mesh=None, axis: str = "data"):
 
     Pencil plans need the ``mesh`` (and device-axis name) the plan's
     ``n_devices`` refers to.
+
+    Single-device kinds run through the resilience degradation ladder
+    (:func:`repro.resilience.run_plan`): an engine failure is quarantined
+    and the call retries the next-best healthy rung instead of raising.
+    The pencil and oaconv2d composites dispatch directly — their variants
+    compose per-pass engines that each ladder on their own.
     """
     kind = plan.key.kind
     inv = plan.key.direction == "inv"
     if kind == "fft1d":
         from repro.core.fft1d import fft_impl, ifft_impl
 
-        return (ifft_impl if inv else fft_impl)(x, variant=plan.variant)
+        impl = ifft_impl if inv else fft_impl
+        return run_plan(plan, lambda v: impl(x, variant=v))
     if kind == "fft2d":
         from repro.core.fft2d import fft2_impl, ifft2_impl
 
-        return (ifft2_impl if inv else fft2_impl)(x, variant=plan.variant)
+        impl = ifft2_impl if inv else fft2_impl
+        return run_plan(plan, lambda v: impl(x, variant=v))
     if kind == "rfft1d":
         from repro.core.rfft import irfft_impl, rfft_impl
 
-        return (irfft_impl if inv else rfft_impl)(x, variant=plan.variant)
+        impl = irfft_impl if inv else rfft_impl
+        return run_plan(plan, lambda v: impl(x, variant=v))
     if kind == "rfft2d":
         from repro.core.rfft import irfft2_impl, rfft2_impl
 
-        return (irfft2_impl if inv else rfft2_impl)(x, variant=plan.variant)
+        impl = irfft2_impl if inv else rfft2_impl
+        return run_plan(plan, lambda v: impl(x, variant=v))
     if kind == "fft2d_stream":
         from repro.core.fft2d import fft2_stream
 
-        return fft2_stream(x, variant=plan.variant, unroll=plan.unroll)
+        return run_plan(
+            plan, lambda v: fft2_stream(x, variant=v, unroll=plan.unroll)
+        )
     if kind == "fft2d_pencil":
         if mesh is None:
             raise ValueError("execute() needs mesh=... for a pencil plan")

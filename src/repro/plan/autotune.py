@@ -49,6 +49,8 @@ from repro.core.fft1d import butterfly_counts
 from repro.core.spectral import _next_pow2
 from repro.launch.roofline import Roofline
 from repro.plan.plan import FFTPlan, ProblemKey
+from repro.resilience import faults as _faults
+from repro.resilience.breaker import quarantine
 
 __all__ = [
     "estimate_plan",
@@ -74,6 +76,14 @@ _BACKEND_SLOWDOWN = {"cpu": 40.0}
 #: Real-input (two-for-one) kinds.
 _REAL_KINDS = ("rfft1d", "rfft2d")
 
+#: Per-candidate wall-clock budget (seconds) for a MEASURE sweep. A
+#: candidate whose warmup+timing loop exceeds it is skipped and recorded
+#: in the ``plan.measure`` span; a sweep where EVERY candidate blows the
+#: budget degrades to ESTIMATE with reason ``measure_timeout``. The check
+#: runs between calls (a single hung jit cannot be preempted from Python),
+#: so the guard bounds sweeps that are slow, not ones that never return.
+MEASURE_CANDIDATE_BUDGET_S = 30.0
+
 
 def variant_candidates(key: ProblemKey) -> Tuple[str, ...]:
     """Engines the planner may legally consider for ``key``.
@@ -84,18 +94,32 @@ def variant_candidates(key: ProblemKey) -> Tuple[str, ...]:
     ``EngineSpec.supports``). Per-engine cost tables, fused-kind lists and
     pow2/VMEM gates all live on the specs now — registering an engine is
     enough to enter every sweep.
+
+    Engines quarantined for this problem key (``repro.resilience``
+    circuit breaker open after a failure) are excluded, so the planner
+    routes around a benched engine until its cooldown admits a probe.
+    When quarantine would empty the list, the ``reliable``-marked rungs
+    (``stockham``/``reference_x64``) come back regardless — the ladder
+    must always have a bottom.
     """
     from repro.engines import iter_engines  # lazy: engines is the leaf layer
 
-    names = tuple(s.name for s in iter_engines() if s.supports(key))
-    if not names:
+    specs = tuple(s for s in iter_engines() if s.supports(key))
+    if not specs:
         scope = f" under backend scope {key.backends}" if key.backends else ""
         raise ValueError(
             f"no registered engine supports kind {key.kind!r} at precision "
             f"{key.precision!r}{scope}; registered engines: "
             f"{tuple(s.name for s in iter_engines())}"
         )
-    return names
+    breaker = quarantine()
+    healthy = tuple(
+        s.name for s in specs if not breaker.excluded(s.name, key)
+    )
+    if healthy:
+        return healthy
+    reliable = tuple(s.name for s in specs if s.reliable)
+    return reliable or tuple(s.name for s in specs)
 
 
 def _transform_geometry(key: ProblemKey) -> Tuple[int, int, int]:
@@ -335,17 +359,42 @@ def estimate_plan(key: ProblemKey) -> FFTPlan:
 # ------------------------------- MEASURE ---------------------------------
 
 
-def _time_us(fn: Callable, x, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall time per call in microseconds (first call = compile)."""
+class MeasureTimeout(Exception):
+    """A MEASURE candidate exceeded its wall-clock budget (sweep guard)."""
+
+
+def _time_us(
+    fn: Callable,
+    x,
+    warmup: int = 1,
+    iters: int = 5,
+    budget_s: Optional[float] = None,
+) -> float:
+    """Median wall time per call in microseconds (first call = compile).
+
+    ``budget_s`` bounds the candidate's TOTAL wall clock (warmup included):
+    past it, :class:`MeasureTimeout` aborts the candidate between calls so
+    one pathologically slow schedule cannot hang the whole sweep.
+    """
     import jax
+
+    start = time.perf_counter()
+
+    def checkpoint():
+        if budget_s is not None and time.perf_counter() - start > budget_s:
+            raise MeasureTimeout(
+                f"candidate exceeded its {budget_s:.1f}s measure budget"
+            )
 
     for _ in range(max(warmup, 1)):
         jax.block_until_ready(fn(x))
+        checkpoint()
     samples = []
     for _ in range(max(iters, 1)):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(x))
         samples.append(time.perf_counter() - t0)
+        checkpoint()
     samples.sort()
     return samples[len(samples) // 2] * 1e6
 
@@ -420,6 +469,7 @@ def measure_plan(
     warmup: int = 1,
     iters: int = 5,
     timings_out: Optional[Dict[str, float]] = None,
+    budget_s: Optional[float] = None,
 ) -> FFTPlan:
     """Timed candidate sweep (FFTW ``MEASURE``): jit + run every schedule.
 
@@ -427,13 +477,22 @@ def measure_plan(
     keyed ``"variant"`` or ``"variant/unroll=k"`` — benchmarks report it.
     Double-precision keys sweep under ``jax.enable_x64`` so the timed
     calls really trace and move 64-bit data.
+
+    Each candidate gets ``budget_s`` of wall clock (default
+    :data:`MEASURE_CANDIDATE_BUDGET_S`); candidates that exceed it — or
+    raise — are skipped and recorded in the ``plan.measure`` span rather
+    than hanging or killing the sweep. A sweep with no surviving
+    candidate returns the ESTIMATE plan with ``degrade_reason``
+    ``"measure_timeout"`` (all timed out) or ``"measure_failed"``.
     """
+    if budget_s is None:
+        budget_s = MEASURE_CANDIDATE_BUDGET_S
     if key.precision == "double":
         from jax.experimental import enable_x64  # lazy
 
         with enable_x64():
-            return _measure_plan_impl(key, warmup, iters, timings_out)
-    return _measure_plan_impl(key, warmup, iters, timings_out)
+            return _measure_plan_impl(key, warmup, iters, timings_out, budget_s)
+    return _measure_plan_impl(key, warmup, iters, timings_out, budget_s)
 
 
 def _measure_plan_impl(
@@ -441,12 +500,16 @@ def _measure_plan_impl(
     warmup: int,
     iters: int,
     timings_out: Optional[Dict[str, float]],
+    budget_s: float,
 ) -> FFTPlan:
+    import dataclasses
+
     from repro import obs  # lazy: keep autotune importable without obs users
 
     x = _measure_input(key)
     best: Optional[Tuple[Tuple[str, int], float]] = None
     timings: Dict[str, float] = {}
+    skipped: Dict[str, str] = {}
     # One span for the whole sweep (it is the expensive planner action —
     # under xfft.config(observe=True) it lands in XLA profiles too), with
     # every candidate's median attached to the emitted event.
@@ -459,18 +522,56 @@ def _measure_plan_impl(
         precision=key.precision,
     ) as out:
         for (variant, unroll), fn in _candidate_runners(key).items():
-            us = _time_us(fn, x, warmup=warmup, iters=iters)
             label = variant if unroll == 1 else f"{variant}/unroll={unroll}"
+
+            def run(arr, _fn=fn, _variant=variant):
+                # plan.measure fault seam fires per timed call, so an
+                # injected latency accrues against the candidate budget
+                # exactly like a genuinely slow schedule would.
+                _faults.maybe_fail(
+                    "plan.measure", engine=_variant, kind=key.kind
+                )
+                return _fn(arr)
+
+            try:
+                us = _time_us(run, x, warmup=warmup, iters=iters,
+                              budget_s=budget_s)
+            except MeasureTimeout:
+                skipped[label] = "timeout"
+                continue
+            except Exception as e:  # noqa: BLE001 — one bad candidate
+                skipped[label] = f"error: {e!r}"
+                continue
             timings[label] = us
             if timings_out is not None:
                 timings_out[label] = us
             if best is None or us < best[1]:
                 best = ((variant, unroll), us)
+        out["candidates"] = len(timings) + len(skipped)
+        out["timings"] = dict(timings)
+        if skipped:
+            out["skipped"] = dict(skipped)
+        if best is None:
+            # Nothing survived: fall back to the analytic plan, with the
+            # reason recorded on the plan AND in the degrade vocabulary.
+            reason = (
+                "measure_timeout"
+                if any(r == "timeout" for r in skipped.values())
+                else "measure_failed"
+            )
+            out["chosen"] = None
+            out["degrade_reason"] = reason
+            obs.emit(
+                "plan.degrade", kind=key.kind, shape=key.shape,
+                direction=key.direction, reason=reason,
+            )
+            obs.count(f"plan.degrade.{reason}")
+            return dataclasses.replace(
+                estimate_plan(key), degrade_reason=reason
+            )
         (variant, unroll), us = best
         out["chosen"] = variant
         out["chosen_us"] = us
-        out["candidates"] = len(timings)
-        out["timings"] = dict(timings)
     return FFTPlan(
         key=key,
         variant=variant,

@@ -25,6 +25,8 @@ from typing import Dict, Optional, Tuple
 
 from repro import obs
 from repro.plan.plan import PLAN_SCHEMA_VERSION, FFTPlan, ProblemKey
+from repro.resilience import faults as _faults
+from repro.resilience.faults import InjectedFault
 
 __all__ = ["LoadReport", "PlanCache", "default_cache", "reset_default_cache"]
 
@@ -90,6 +92,9 @@ class PlanCache:
         self.misses = 0
         self.key_hits: Dict[str, int] = {}
         self.load_report: Optional[LoadReport] = None
+        #: Set when a save hit an unwritable path and the cache degraded
+        #: to memory-only; holds the path that refused the write.
+        self.readonly_path: Optional[str] = None
         if path and autoload and os.path.exists(path):
             self.load(path)
 
@@ -131,8 +136,23 @@ class PlanCache:
 
     # ------------------------------ persistence ------------------------------
 
-    def save(self, path: Optional[str] = None) -> str:
-        """Atomically write all plans to ``path`` (default: ``self.path``)."""
+    def save(self, path: Optional[str] = None) -> Optional[str]:
+        """Atomically write all plans to ``path`` (default: ``self.path``).
+
+        The write goes to a temp file in the SAME directory (same
+        filesystem, so the rename is atomic), is fsynced, then
+        ``os.replace``d over the target — a killed process can leave a
+        stray ``.tmp`` but never a truncated wisdom file, and concurrent
+        writers each land a complete file (last writer wins).
+
+        An unwritable path (read-only wisdom directory, permission loss
+        at runtime) does NOT raise: the cache degrades to memory-only —
+        ``self.path`` is cleared so no further saves are attempted, the
+        original path is kept on :attr:`readonly_path`, and a
+        ``plan.cache.readonly`` obs event records the degrade. Plans keep
+        serving from memory; only persistence is lost. Returns the path
+        written, or ``None`` after a degrade.
+        """
         path = path or self.path
         if not path:
             raise ValueError("PlanCache.save needs a path (none configured)")
@@ -141,16 +161,34 @@ class PlanCache:
             "plan_schema_version": PLAN_SCHEMA_VERSION,
             "plans": {k: p.to_dict() for k, p in self._plans.items()},
         }
-        d = os.path.dirname(os.path.abspath(path))
-        os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
         try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=1, sort_keys=True)
-            os.replace(tmp, path)
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
+            _faults.maybe_fail("plan.cache.save", path=path)
+            d = os.path.dirname(os.path.abspath(path))
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path)
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+        except (OSError, InjectedFault) as e:
+            self.readonly_path = path
+            if self.path == path:
+                self.path = None  # memory-only from here on
+            obs.emit(
+                "plan.cache.readonly", path=path, error=str(e),
+                entries=len(self._plans),
+            )
+            obs.count("plan.cache.readonly")
+            _log.warning(
+                "plan cache path %s is unwritable (%s); degrading to "
+                "in-memory caching", path, e,
+            )
+            return None
         obs.emit("plan.cache.save", path=path, entries=len(self._plans))
         return path
 
@@ -168,9 +206,10 @@ class PlanCache:
         if not path:
             raise ValueError("PlanCache.load needs a path (none configured)")
         try:
+            _faults.maybe_fail("plan.cache.load", path=path)
             with open(path) as f:
                 payload = json.load(f)
-        except (OSError, json.JSONDecodeError) as e:
+        except (OSError, json.JSONDecodeError, InjectedFault) as e:
             return self._account_load(path, LoadReport(file_error=str(e)))
         prefix = f"v{PLAN_SCHEMA_VERSION}|"
         kept = stale = malformed = mismatch = 0

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.resilience.policies import ServicePolicy, admit, execute_with_policy
 
 
 @dataclasses.dataclass
@@ -37,11 +38,17 @@ class Request:
 
 
 class ServeEngine:
-    def __init__(self, model, params, *, batch: int, max_len: int, dtype=jnp.float32):
+    def __init__(self, model, params, *, batch: int, max_len: int, dtype=jnp.float32,
+                 policy: ServicePolicy | None = None):
         self.model = model
         self.params = params
         self.batch = batch
         self.max_len = max_len
+        # Serving hardening (repro.resilience): per-batch deadline, bounded
+        # retry with jittered backoff, queue-depth load shedding. The
+        # default policy is maximally permissive — existing callers see no
+        # behaviour change.
+        self.policy = policy if policy is not None else ServicePolicy()
         self.caches = model.init_cache_fn(batch, max_len, dtype)
         self._decode = jax.jit(model.decode_fn)
         self._prefill = jax.jit(model.prefill_fn)
@@ -70,7 +77,14 @@ class ServeEngine:
 
     def serve_queue(self, queue: list[Request], extras: dict | None = None) -> list[Request]:
         """Continuous batching: process a request queue with ``batch`` slots,
-        refilling finished slots from the queue (prompts padded to equal S)."""
+        refilling finished slots from the queue (prompts padded to equal S).
+
+        Under a bounding :class:`repro.resilience.ServicePolicy`, a queue
+        deeper than ``max_queue`` is rejected whole with ``Overloaded``
+        (shed at admission — no request is half-served), and each batch
+        step runs with the policy's deadline/retry envelope.
+        """
+        admit(self.policy, len(queue), service="lm")
         pending = list(queue)
         active: list[Request | None] = [None] * self.batch
         results: list[Request] = []
@@ -96,10 +110,14 @@ class ServeEngine:
                 queued=len(pending),
                 prompt_len=s,
             ):
-                outs = self.generate(
-                    [toks[i] for i in range(self.batch)],
-                    max_new=max(a.max_new for a in live),
-                    extras=extras,
+                outs = execute_with_policy(
+                    self.policy,
+                    lambda: self.generate(
+                        [toks[i] for i in range(self.batch)],
+                        max_new=max(a.max_new for a in live),
+                        extras=extras,
+                    ),
+                    service="lm",
                 )
             for i, a in enumerate(active):
                 if a is not None:
@@ -133,7 +151,8 @@ class SpectrumService:
     file-backed cache a service tunes once per shape for its lifetime.
     """
 
-    def __init__(self, plan_mode: str | None = None, cache=None):
+    def __init__(self, plan_mode: str | None = None, cache=None,
+                 policy: ServicePolicy | None = None):
         # None defers to the scoped repro.xfft.config mode, so an operator's
         # `xfft.config(mode="measure")` tunes the service exactly as it
         # tunes direct calls; an explicit plan_mode pins the policy.
@@ -141,10 +160,12 @@ class SpectrumService:
             raise ValueError(f"plan_mode must be 'estimate' or 'measure', got {plan_mode!r}")
         self.plan_mode = plan_mode
         self.cache = cache
+        self.policy = policy if policy is not None else ServicePolicy()
         self.plans: dict = {}               # (config, cache_key) -> FFTPlan memo
 
     def _plan_for(self, kind: str, shape, dtype: str):
         from repro.plan import problem_key, resolve_call
+        from repro.resilience import quarantine
         from repro.xfft import get_config
 
         # resolve_call (not plan_fft): the service honours scoped
@@ -153,18 +174,32 @@ class SpectrumService:
         # the constructor pinned plan_mode). The session memo keys on the
         # active config too, so a scoped override neither reads nor
         # leaves stale memo entries.
-        memo_key = (get_config(), problem_key(kind, shape, dtype).cache_key())
+        pk = problem_key(kind, shape, dtype)
+        memo_key = (get_config(), pk.cache_key())
         plan = self.plans.get(memo_key)
+        breaker = quarantine()
+        if plan is not None and breaker.excluded(plan.variant, pk):
+            plan = None  # memoized engine is benched: re-resolve around it
         if plan is None:
             plan = resolve_call(kind, shape, dtype=dtype, mode=self.plan_mode,
                                 cache=self.cache)
-            self.plans[memo_key] = plan
+            # Plans resolved under an active quarantine are workarounds:
+            # don't memoize them, or the service would keep serving the
+            # fallback after the benched engine recovers.
+            if not breaker.affects(pk):
+                self.plans[memo_key] = plan
         return plan
 
     def serve(self, requests: list[SpectrumRequest]) -> list[SpectrumRequest]:
-        """Transform every request in-place; returns the same list."""
+        """Transform every request in-place; returns the same list.
+
+        Admission first: a queue deeper than the policy's ``max_queue``
+        sheds with ``Overloaded`` before any group executes. Each group
+        then runs under the policy's deadline/retry envelope.
+        """
         from repro.plan import execute
 
+        admit(self.policy, len(requests), service="spectrum")
         groups: dict = {}
         for i, r in enumerate(requests):
             frame = np.asarray(r.frame)
@@ -188,7 +223,11 @@ class SpectrumService:
                 "serve.batch", service="spectrum", kind=kind, shape=shape,
                 batch=len(idxs), variant=plan.variant,
             ):
-                out = np.asarray(execute(plan, jnp.asarray(batch)))
+                out = np.asarray(execute_with_policy(
+                    self.policy,
+                    lambda: execute(plan, jnp.asarray(batch)),
+                    service="spectrum", kind=kind,
+                ))
             for j, i in enumerate(idxs):
                 requests[i].spectrum = out[j]
                 requests[i].done = True

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.resilience.policies import admit, execute_with_policy
 from repro.serve.engine import SpectrumRequest, SpectrumService
 
 __all__ = ["RegistrationRequest", "ConvolutionRequest", "ImagingService"]
@@ -62,8 +63,11 @@ class ImagingService(SpectrumService):
 
         The whole queue is partitioned AND shape-validated before any
         group executes, so an invalid request fails the call without
-        leaving the queue half-served.
+        leaving the queue half-served — and admission control runs on the
+        FULL mixed queue, so an overloaded service sheds before any
+        family is touched.
         """
+        admit(self.policy, len(requests), service="imaging")
         spectra, registrations, convolutions = [], [], []
         for i, r in enumerate(requests):
             if isinstance(r, SpectrumRequest):
@@ -146,9 +150,13 @@ class ImagingService(SpectrumService):
                 "serve.batch", service="registration", shape=shape,
                 batch=len(members), upsample=upsample,
             ):
-                shifts = np.asarray(
-                    register_phase_correlation(refs, movs, upsample_factor=upsample)
-                )
+                shifts = np.asarray(execute_with_policy(
+                    self.policy,
+                    lambda: register_phase_correlation(
+                        refs, movs, upsample_factor=upsample
+                    ),
+                    service="registration",
+                ))
             for r, shift in zip(members, shifts):
                 r.shift = shift
                 r.done = True
@@ -179,9 +187,11 @@ class ImagingService(SpectrumService):
                 "serve.batch", service="convolution", shape=ishape,
                 kernel=kshape, batch=len(members), tile=plan.tile,
             ):
-                out = np.asarray(
-                    oaconvolve2(images, kernels, mode=mode, tile=plan.tile)
-                )
+                out = np.asarray(execute_with_policy(
+                    self.policy,
+                    lambda: oaconvolve2(images, kernels, mode=mode, tile=plan.tile),
+                    service="convolution",
+                ))
             for r, res in zip(members, out):
                 r.out = res
                 r.done = True

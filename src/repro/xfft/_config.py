@@ -35,6 +35,7 @@ from repro.engines import (
     registered_backends,
     registered_variants,
 )
+from repro.resilience.faults import FaultPlan, pop_faults, push_faults
 
 __all__ = ["XFFTConfig", "config", "get_config"]
 
@@ -82,6 +83,15 @@ class XFFTConfig:
                 disables both. ``repro.obs.capture()`` is the usual
                 spelling for getting a trace back; this field exists so a
                 long-lived scope (a service process) can stream into one.
+    faults    — chaos policy for calls in scope: a
+                :class:`repro.resilience.FaultPlan` injects its seeded
+                fault schedule into every named seam reached in scope;
+                ``False`` (the default) injects nothing. The scoping
+                machinery mirrors ``observe=`` exactly.
+    check_health — opt-in output-health guard: ``"nan"`` makes the
+                degradation ladder treat a non-finite transform output as
+                an engine failure (retry one rung down); ``"off"`` (the
+                default) trusts outputs.
     """
 
     variant: Optional[str] = None
@@ -90,6 +100,8 @@ class XFFTConfig:
     cache_dir: Optional[str] = None
     backends: Tuple[str, ...] = ()
     observe: Any = False
+    faults: Any = False
+    check_health: str = "off"
 
 
 _ACTIVE: contextvars.ContextVar[XFFTConfig] = contextvars.ContextVar(
@@ -143,12 +155,26 @@ class config:
         cache_dir: Optional[str] = None,
         backend: Union[str, Sequence[str], None] = None,
         observe: Any = None,
+        faults: Any = None,
+        check_health: Optional[str] = None,
     ):
         prev = _ACTIVE.get()
         if observe is not None and not isinstance(observe, (bool, obs.Trace)):
             raise ValueError(
                 f"observe must be a repro.obs.Trace, True (profiler "
                 f"annotations), False (off) or None (inherit); got {observe!r}"
+            )
+        if faults is not None and faults is not False and not isinstance(
+            faults, FaultPlan
+        ):
+            raise ValueError(
+                f"faults must be a repro.resilience.FaultPlan, False (off) "
+                f"or None (inherit); got {faults!r}"
+            )
+        if check_health is not None and check_health not in ("nan", "off"):
+            raise ValueError(
+                f'check_health must be "nan", "off" or None (inherit); '
+                f"got {check_health!r}"
             )
         clear_variant = variant == "auto"  # "auto" clears an outer override
         if clear_variant:
@@ -186,6 +212,10 @@ class config:
             ),
             backends=backends if backends is not None else prev.backends,
             observe=observe if observe is not None else prev.observe,
+            faults=faults if faults is not None else prev.faults,
+            check_health=(
+                check_health if check_health is not None else prev.check_health
+            ),
         )
         # A forced variant must be CAPABLE of the scope's constraints —
         # otherwise config(precision="double", variant="stockham") would
@@ -210,6 +240,13 @@ class config:
         # Only an EXPLICIT observe= pushes obs scope state: inheriting must
         # not re-push (a Trace pushed twice would record every event twice).
         self._obs_tokens = obs.push_observe(observe) if observe is not None else None
+        # Same rule for faults=: an explicit FaultPlan arms a fresh seeded
+        # FaultState for this scope; an explicit False pushes a cleared
+        # scope; inheriting leaves the enclosing scope's firing state alone.
+        self._faults_token = (
+            push_faults(faults if isinstance(faults, FaultPlan) else None)
+            if faults is not None else None
+        )
 
     def __enter__(self) -> "config":
         return self
@@ -219,6 +256,9 @@ class config:
 
     def restore(self) -> None:
         """Undo this call's overrides (automatic when used as a context)."""
+        if self._faults_token is not None:
+            pop_faults(self._faults_token)
+            self._faults_token = None
         if self._obs_tokens is not None:
             obs.pop_observe(self._obs_tokens)
             self._obs_tokens = None

@@ -28,6 +28,7 @@ def report_data(cache=None) -> dict:
     # must stay importable without the planner.
     from repro.plan.api import _cache_for_dir
     from repro.plan.cache import default_cache
+    from repro.resilience.breaker import quarantine
     from repro.xfft._config import get_config
 
     cfg = get_config()
@@ -69,7 +70,13 @@ def report_data(cache=None) -> dict:
                 None if cache.load_report is None
                 else cache.load_report.to_dict()
             ),
+            "readonly_path": getattr(cache, "readonly_path", None),
         },
+        # Live circuit-breaker state (repro.resilience): one row per
+        # non-closed (engine, problem-key) breaker — which engines are
+        # benched, for which problems, and how long until a half-open
+        # probe is admitted. Empty when nothing has failed.
+        "resilience": {"quarantine": quarantine().table()},
         "counters": obs.counters(),
     }
 
@@ -119,6 +126,22 @@ def report(cache=None) -> str:
             f" malformed={ld['malformed']} key_mismatch={ld['key_mismatch']}"
             + (f" file_error={ld['file_error']}" if ld["file_error"] else "")
         )
+    if c.get("readonly_path"):
+        lines.append(
+            f"wisdom save: path {c['readonly_path']} unwritable -> "
+            "degraded to in-memory caching"
+        )
+    qrows = d["resilience"]["quarantine"]
+    if qrows:
+        lines.append("quarantine:")
+        for q in qrows:
+            line = (
+                f"  {q['engine']:<12} {q['state']:<9} failures={q['failures']}"
+            )
+            if q["state"] == "open":
+                line += f" cooldown={q['cooldown_remaining_s']:.1f}s"
+            line += f"  {q['key']}"
+            lines.append(line)
     counters = d["counters"]
     if counters:
         lines.append("counters:")

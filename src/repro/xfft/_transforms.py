@@ -9,7 +9,10 @@ Every function here follows the same dispatch pipeline:
    (plan cache -> scoped config overrides -> concrete engine from the
    ``repro.engines`` registry, capability-filtered by the scope's
    precision and backend restriction);
-4. run the ``repro.core`` engine implementation under that variant;
+4. run the ``repro.core`` engine implementation under that variant,
+   through the resilience degradation ladder
+   (:func:`repro.resilience.run_plan`): an engine failure quarantines
+   the engine for this problem key and retries the next-best rung;
 5. apply the ``norm`` scaling on top of the engines' native convention
    (forward unscaled, inverse 1/N — i.e. ``"backward"``).
 
@@ -48,6 +51,7 @@ from repro.core.rfft import rfft2_impl as _rfft2_impl
 from repro.core.rfft import rfft_impl as _rfft_impl
 from repro.plan.api import resolve_call
 from repro.plan.plan import NORMS
+from repro.resilience.ladder import run_plan as _run_plan
 from repro.xfft._config import get_config
 
 __all__ = [
@@ -166,7 +170,7 @@ def fft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None):
     length = x.shape[ax]
     _check_pow2(length, ax, "fft")
     plan = resolve_call("fft1d", _moved_shape(x.shape, ax))
-    y = _fft_impl(x, axis=ax, variant=plan.variant)
+    y = _run_plan(plan, lambda v: _fft_impl(x, axis=ax, variant=v))
     return _scale(y, norm, length, forward=True)
 
 
@@ -181,7 +185,7 @@ def ifft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None)
     length = x.shape[ax]
     _check_pow2(length, ax, "ifft")
     plan = resolve_call("fft1d", _moved_shape(x.shape, ax), direction="inv")
-    y = _ifft_impl(x, axis=ax, variant=plan.variant)
+    y = _run_plan(plan, lambda v: _ifft_impl(x, axis=ax, variant=v))
     return _scale(y, norm, length, forward=False)
 
 
@@ -220,7 +224,7 @@ def fft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     x, norm, canon, moved = _prep_2d(x, s, axes, norm, "fft2")
     h, w = x.shape[-2], x.shape[-1]
     plan = resolve_call("fft2d", x.shape)
-    y = _fft2_impl(x, variant=plan.variant)
+    y = _run_plan(plan, lambda v: _fft2_impl(x, variant=v))
     return _unmove_2d(_scale(y, norm, h * w, forward=True), canon, moved)
 
 
@@ -230,7 +234,7 @@ def ifft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     x, norm, canon, moved = _prep_2d(x, s, axes, norm, "ifft2")
     h, w = x.shape[-2], x.shape[-1]
     plan = resolve_call("fft2d", x.shape, direction="inv")
-    y = _ifft2_impl(x, variant=plan.variant)
+    y = _run_plan(plan, lambda v: _ifft2_impl(x, variant=v))
     return _unmove_2d(_scale(y, norm, h * w, forward=False), canon, moved)
 
 
@@ -302,7 +306,7 @@ def rfft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None)
     length = x.shape[ax]
     _check_pow2(length, ax, "rfft")
     plan = resolve_call("rfft1d", _moved_shape(x.shape, ax), dtype="float32")
-    y = _rfft_impl(x, axis=ax, variant=plan.variant)
+    y = _run_plan(plan, lambda v: _rfft_impl(x, axis=ax, variant=v))
     return _scale(y, norm, length, forward=True)
 
 
@@ -319,7 +323,7 @@ def irfft(x, n: Optional[int] = None, axis: int = -1, norm: Optional[str] = None
     x = _resize_axis(x, length // 2 + 1, ax)
     key_shape = _moved_shape(x.shape, ax)[:-1] + (length,)
     plan = resolve_call("rfft1d", key_shape, dtype="float32", direction="inv")
-    y = _irfft_impl(x, axis=ax, variant=plan.variant)
+    y = _run_plan(plan, lambda v: _irfft_impl(x, axis=ax, variant=v))
     return _scale(y, norm, length, forward=False)
 
 
@@ -330,7 +334,7 @@ def rfft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     x, norm, canon, moved = _prep_2d(x, s, axes, norm, "rfft2")
     h, w = x.shape[-2], x.shape[-1]
     plan = resolve_call("rfft2d", x.shape, dtype="float32")
-    y = _rfft2_impl(x, variant=plan.variant)
+    y = _run_plan(plan, lambda v: _rfft2_impl(x, variant=v))
     return _unmove_2d(_scale(y, norm, h * w, forward=True), canon, moved)
 
 
@@ -357,7 +361,7 @@ def irfft2(x, s=None, axes=(-2, -1), norm: Optional[str] = None):
     plan = resolve_call(
         "rfft2d", x.shape[:-1] + (w,), dtype="float32", direction="inv"
     )
-    y = _irfft2_impl(x, variant=plan.variant)
+    y = _run_plan(plan, lambda v: _irfft2_impl(x, variant=v))
     return _unmove_2d(_scale(y, norm, h * w, forward=False), canon, moved)
 
 

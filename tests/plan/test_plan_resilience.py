@@ -1,0 +1,224 @@
+"""Planner + cache resilience: quarantine filtering, readonly degrade,
+atomic concurrent wisdom writes, and the MEASURE wall-clock budget."""
+
+import json
+import os
+import threading
+import time
+
+import pytest
+
+import repro.xfft as xfft
+from repro import obs
+from repro.plan import problem_key, resolve_call
+from repro.plan.autotune import measure_plan, variant_candidates
+from repro.plan.cache import PlanCache, default_cache, reset_default_cache
+from repro.resilience import FaultPlan, FaultSpec, configure, quarantine, reset
+
+
+KEY = problem_key("fft2d", (8, 8))
+
+
+@pytest.fixture(autouse=True)
+def _clean_breaker():
+    reset()
+    configure(threshold=1, cooldown_s=30.0, clock=time.monotonic)
+    yield
+    reset()
+    configure(threshold=1, cooldown_s=30.0, clock=time.monotonic)
+
+
+# --------------------- quarantine-aware candidate sets ---------------------
+
+
+def test_variant_candidates_exclude_quarantined():
+    baseline = variant_candidates(KEY)
+    target = baseline[0]
+    quarantine().record_failure(target, KEY)
+    filtered = variant_candidates(KEY)
+    assert target not in filtered
+    assert set(filtered) == set(baseline) - {target}
+
+
+def test_variant_candidates_bottom_out_at_reliable():
+    """Quarantining everything still leaves the always-works jnp rung."""
+    for name in variant_candidates(KEY):
+        quarantine().record_failure(name, KEY)
+    survivors = variant_candidates(KEY)
+    assert survivors == ("stockham",)
+
+
+def test_resolve_call_routes_around_quarantine_without_caching():
+    first = resolve_call("fft2d", (8, 8)).variant
+    quarantine().record_failure(first, KEY, error="boom")
+    with obs.capture() as trace:
+        fallback = resolve_call("fft2d", (8, 8))
+    assert fallback.variant != first
+    (e,) = trace.select("plan.resolve")
+    assert e["outcome"] == "quarantined"
+    # The workaround plan must not poison the wisdom cache: once the
+    # breaker resets, the original first choice resolves again.
+    reset()
+    assert resolve_call("fft2d", (8, 8)).variant == first
+
+
+def test_measure_under_quarantine_degrades_instead_of_sweeping():
+    """Sweeping while an engine is benched would persist wisdom tuned over
+    a temporarily reduced engine population — degrade instead."""
+    first = resolve_call("fft2d", (8, 8)).variant
+    quarantine().record_failure(first, KEY, error="boom")
+    with obs.capture() as trace, xfft.config(mode="measure"):
+        plan = resolve_call("fft2d", (8, 8))
+    assert plan.mode == "estimate"
+    assert plan.degrade_reason == "engine_quarantined"
+    assert trace.select("plan.measure") == []  # no sweep ran
+    (e,) = trace.select("plan.degrade")
+    assert e["reason"] == "engine_quarantined"
+
+
+# ------------------------- wisdom write resilience -------------------------
+
+
+def _populated_cache(path=None):
+    cache = PlanCache(path=path)
+    with xfft.config(mode="estimate"):
+        resolve_call("fft2d", (8, 8), cache=cache)
+        resolve_call("fft1d", (64,), cache=cache)
+    return cache
+
+
+def test_save_is_atomic_under_concurrent_writers(tmp_path):
+    path = str(tmp_path / "wisdom.json")
+    cache = _populated_cache()
+    errors = []
+
+    def write():
+        try:
+            for _ in range(10):
+                assert cache.save(path) == path
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=write) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    # Whatever interleaving happened, the surviving file is one complete
+    # JSON document with every entry — never truncated or interleaved.
+    with open(path) as f:
+        payload = json.load(f)
+    assert len(payload["plans"]) == len(cache)
+    fresh = PlanCache(path=path)
+    assert len(fresh) == len(cache)
+    assert not [p for p in os.listdir(tmp_path) if p.endswith(".tmp")]
+
+
+def test_unwritable_path_degrades_to_memory(tmp_path):
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("a file where a directory must go")
+    path = str(blocker / "sub" / "wisdom.json")  # makedirs must fail
+    cache = _populated_cache()
+    cache.path = path
+    with obs.capture() as trace:
+        assert cache.save() is None
+    assert cache.path is None          # memory-only from here on
+    assert cache.readonly_path == path
+    (e,) = trace.select("plan.cache.readonly")
+    assert e["path"] == path
+    assert e["entries"] == len(cache)
+    # Plans keep serving from memory; only persistence is lost.
+    assert len(cache) > 0
+    assert resolve_call("fft2d", (8, 8), cache=cache) is not None
+
+
+def test_injected_save_fault_degrades_identically(tmp_path):
+    path = str(tmp_path / "wisdom.json")
+    cache = _populated_cache()
+    cache.path = path
+    plan = FaultPlan(FaultSpec("plan.cache.save", times=1))
+    with obs.capture() as trace, xfft.config(faults=plan):
+        assert cache.save() is None
+    assert cache.readonly_path == path
+    assert len(trace.select("plan.cache.readonly")) == 1
+    assert not os.path.exists(path)  # degraded before any bytes landed
+
+
+def test_injected_load_fault_accounts_as_file_error(tmp_path):
+    path = str(tmp_path / "wisdom.json")
+    _populated_cache(path=None).save(path)
+    cache = PlanCache()
+    plan = FaultPlan(FaultSpec("plan.cache.load", times=1))
+    with xfft.config(faults=plan):
+        report = cache.load(path)
+    assert report.kept == 0
+    assert "injected fault" in report.file_error
+    assert cache.load(path).kept > 0  # budget spent: next load succeeds
+
+
+def test_default_cache_degrade_via_env(tmp_path, monkeypatch):
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("x")
+    bad = str(blocker / "wisdom.json")
+    monkeypatch.setenv("REPRO_PLAN_CACHE", bad)
+    reset_default_cache()
+    try:
+        cache = default_cache()
+        assert cache.path == bad
+        with xfft.config(mode="estimate"):
+            resolve_call("fft2d", (8, 8), cache=cache)
+        with obs.capture() as trace:
+            assert cache.save() is None
+        assert cache.path is None
+        assert len(trace.select("plan.cache.readonly")) == 1
+        # report() surfaces the degrade for operators.
+        assert "unwritable" in xfft.report(cache)
+    finally:
+        reset_default_cache()
+
+
+# -------------------------- MEASURE budget guard --------------------------
+
+
+def test_measure_budget_degrades_to_estimate():
+    """A candidate stalled past its wall-clock budget degrades the sweep
+    to ESTIMATE with reason measure_timeout instead of hanging."""
+    stall = FaultPlan(
+        FaultSpec("plan.measure", mode="latency", latency_s=0.2)
+    )
+    with obs.capture() as trace, xfft.config(faults=stall):
+        plan = measure_plan(KEY, budget_s=0.05)
+    assert plan.mode == "estimate"
+    assert plan.degrade_reason == "measure_timeout"
+    (e,) = trace.select("plan.degrade")
+    assert e["reason"] == "measure_timeout"
+
+
+def test_measure_candidate_errors_degrade():
+    crash = FaultPlan(FaultSpec("plan.measure", mode="error"))
+    with obs.capture() as trace, xfft.config(faults=crash):
+        plan = measure_plan(KEY, budget_s=5.0)
+    assert plan.mode == "estimate"
+    assert plan.degrade_reason == "measure_failed"
+    (e,) = trace.select("plan.degrade")
+    assert e["reason"] == "measure_failed"
+
+
+def test_measure_timeout_plans_do_not_resweep(monkeypatch):
+    """A measure_timeout plan is remembered: resolve_call must not retry
+    the whole sweep on every call (re-tune is explicit via force)."""
+    monkeypatch.setattr(
+        "repro.plan.autotune.MEASURE_CANDIDATE_BUDGET_S", 0.05
+    )
+    stall = FaultPlan(
+        FaultSpec("plan.measure", mode="latency", latency_s=0.2)
+    )
+    cache = PlanCache()
+    with xfft.config(faults=stall, mode="measure"):
+        first = resolve_call("fft2d", (8, 8), cache=cache)
+    assert first.degrade_reason == "measure_timeout"
+    with obs.capture() as trace, xfft.config(mode="measure"):
+        again = resolve_call("fft2d", (8, 8), cache=cache)
+    assert again.degrade_reason == "measure_timeout"
+    assert trace.select("plan.measure") == []  # no second sweep

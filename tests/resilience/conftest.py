@@ -1,0 +1,35 @@
+"""Resilience-suite fixtures: every test starts with a clean breaker.
+
+The quarantine registry is process-wide (like the engine registry it
+filters), so a test that opens a breaker must not leak the bench into
+the next test — and a test that swaps the clock must hand wall time
+back.
+"""
+
+import time
+
+import pytest
+
+from repro.resilience import configure, reset
+
+
+@pytest.fixture(autouse=True)
+def _clean_breaker():
+    reset()
+    configure(threshold=1, cooldown_s=30.0, clock=time.monotonic)
+    yield
+    reset()
+    configure(threshold=1, cooldown_s=30.0, clock=time.monotonic)
+
+
+@pytest.fixture
+def fake_clock():
+    """A settable clock: ``clock.now += 31.0`` drives a cooldown."""
+
+    class _Clock:
+        now = 0.0
+
+        def __call__(self):
+            return self.now
+
+    return _Clock()

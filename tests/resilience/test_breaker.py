@@ -1,0 +1,145 @@
+"""Circuit-breaker state machine: every transition, on a fake clock."""
+
+import pytest
+
+from repro import obs
+from repro.plan import problem_key
+from repro.resilience import QuarantineRegistry, configure, quarantine
+from repro.resilience.breaker import reset
+
+
+KEY = problem_key("fft2d", (8, 8))
+OTHER = problem_key("fft2d", (16, 16))
+
+
+def _registry(fake_clock, threshold=1, cooldown_s=30.0):
+    return QuarantineRegistry(
+        threshold=threshold, cooldown_s=cooldown_s, clock=fake_clock
+    )
+
+
+def test_closed_by_default(fake_clock):
+    reg = _registry(fake_clock)
+    assert not reg.excluded("radix4", KEY)
+    assert not reg.affects(KEY)
+    assert reg.table() == []
+
+
+def test_failure_at_threshold_opens(fake_clock):
+    reg = _registry(fake_clock)
+    with obs.capture() as trace:
+        assert reg.record_failure("radix4", KEY, error="boom") is True
+    assert reg.excluded("radix4", KEY)
+    assert reg.affects(KEY)
+    (e,) = trace.select("resilience.breaker")
+    assert e["state"] == "open"
+    assert e["engine"] == "radix4"
+    assert e["failures"] == 1
+
+
+def test_threshold_two_needs_two_failures(fake_clock):
+    reg = _registry(fake_clock, threshold=2)
+    assert reg.record_failure("radix4", KEY) is False
+    assert not reg.excluded("radix4", KEY)
+    assert reg.record_failure("radix4", KEY) is True
+    assert reg.excluded("radix4", KEY)
+
+
+def test_quarantine_is_per_problem_key(fake_clock):
+    reg = _registry(fake_clock)
+    reg.record_failure("radix4", KEY)
+    assert reg.excluded("radix4", KEY)
+    assert not reg.excluded("radix4", OTHER)  # healthy on other shapes
+    assert not reg.excluded("stockham", KEY)  # other engines unaffected
+    assert not reg.affects(OTHER)
+
+
+def test_cooldown_admits_half_open_probe(fake_clock):
+    reg = _registry(fake_clock, cooldown_s=30.0)
+    reg.record_failure("radix4", KEY)
+    fake_clock.now = 29.0
+    assert reg.excluded("radix4", KEY)  # still cooling down
+    fake_clock.now = 30.0
+    with obs.capture() as trace:
+        assert not reg.excluded("radix4", KEY)  # probe admitted
+    (e,) = trace.select("resilience.breaker")
+    assert e["state"] == "half_open"
+    # half-open is non-consuming: every caller is admitted until resolved
+    assert not reg.excluded("radix4", KEY)
+
+
+def test_success_closes_half_open(fake_clock):
+    reg = _registry(fake_clock)
+    reg.record_failure("radix4", KEY)
+    fake_clock.now = 31.0
+    reg.excluded("radix4", KEY)  # -> half_open
+    with obs.capture() as trace:
+        reg.record_success("radix4", KEY)
+    (e,) = trace.select("resilience.breaker")
+    assert e["state"] == "closed"
+    assert not reg.excluded("radix4", KEY)
+    assert not reg.affects(KEY)
+    assert reg.table() == []
+
+
+def test_failure_in_half_open_reopens(fake_clock):
+    reg = _registry(fake_clock, threshold=3)  # even below threshold
+    for _ in range(3):
+        reg.record_failure("radix4", KEY)
+    fake_clock.now = 31.0
+    reg.excluded("radix4", KEY)  # -> half_open
+    assert reg.record_failure("radix4", KEY) is True  # probe answered: reopen
+    assert reg.excluded("radix4", KEY)
+    fake_clock.now = 60.0  # cooldown restarts from the reopen
+    assert reg.excluded("radix4", KEY)
+    fake_clock.now = 61.0
+    assert not reg.excluded("radix4", KEY)
+
+
+def test_success_on_closed_resets_failure_count(fake_clock):
+    reg = _registry(fake_clock, threshold=2)
+    reg.record_failure("radix4", KEY)
+    reg.record_success("radix4", KEY)  # resets the count, no event needed
+    assert reg.record_failure("radix4", KEY) is False  # back to 1 of 2
+
+
+def test_table_rows(fake_clock):
+    reg = _registry(fake_clock, cooldown_s=30.0)
+    reg.record_failure("radix4", KEY, error="InjectedFault('boom')")
+    fake_clock.now = 10.0
+    (row,) = reg.table()
+    assert row["engine"] == "radix4"
+    assert row["state"] == "open"
+    assert row["failures"] == 1
+    assert row["cooldown_remaining_s"] == pytest.approx(20.0)
+    assert "boom" in row["last_error"]
+    assert KEY.cache_key() == row["key"]
+
+
+def test_registry_validation():
+    with pytest.raises(ValueError):
+        QuarantineRegistry(threshold=0)
+    with pytest.raises(ValueError):
+        QuarantineRegistry(cooldown_s=0)
+    with pytest.raises(ValueError):
+        configure(threshold=0)
+    with pytest.raises(ValueError):
+        configure(cooldown_s=-1)
+
+
+def test_configure_mutates_singleton_in_place(fake_clock):
+    reg = quarantine()
+    configure(threshold=5, cooldown_s=1.0, clock=fake_clock)
+    assert quarantine() is reg  # early importers never see a stale registry
+    assert reg.threshold == 5
+    assert reg.cooldown_s == 1.0
+    assert reg.clock is fake_clock
+
+
+def test_reset_drops_all_state(fake_clock):
+    configure(clock=fake_clock)
+    quarantine().record_failure("radix4", KEY)
+    assert quarantine().excluded("radix4", KEY)
+    reset()
+    assert not quarantine().excluded("radix4", KEY)
+    assert quarantine().table() == []

@@ -1,0 +1,223 @@
+"""Unit tests for the deterministic fault-injection harness."""
+
+import numpy as np
+import pytest
+
+import repro.xfft as xfft
+from repro import obs
+from repro.resilience import (
+    FAULT_MODES,
+    FAULT_SEAMS,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    active_faults,
+    pop_faults,
+    push_faults,
+)
+from repro.resilience.faults import FaultState, maybe_corrupt, maybe_fail, vmem_exhausted
+
+
+# ------------------------------ construction ------------------------------
+
+
+def test_spec_rejects_unknown_seam():
+    with pytest.raises(ValueError, match="unknown fault seam"):
+        FaultSpec("engine.appply")
+
+
+def test_spec_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown fault mode"):
+        FaultSpec("engine.apply", mode="segfault")
+
+
+@pytest.mark.parametrize("p", [0.0, -0.1, 1.5])
+def test_spec_rejects_bad_probability(p):
+    with pytest.raises(ValueError, match="probability"):
+        FaultSpec("engine.apply", p=p)
+
+
+def test_spec_rejects_bad_times():
+    with pytest.raises(ValueError, match="times"):
+        FaultSpec("engine.apply", times=0)
+
+
+def test_spec_match_dict_normalized_and_hashable():
+    spec = FaultSpec("engine.apply", match={"engine": "radix4", "kind": "fft2d"})
+    assert spec.match == (("engine", "radix4"), ("kind", "fft2d"))
+    hash(spec)  # must ride on the frozen XFFTConfig
+
+
+def test_plan_normalizes_single_spec_and_is_hashable():
+    plan = FaultPlan(FaultSpec("serve.batch"))
+    assert plan.specs == (FaultSpec("serve.batch"),)
+    hash(plan)
+
+
+def test_plan_rejects_non_spec_entries():
+    with pytest.raises(TypeError, match="FaultSpec"):
+        FaultPlan(specs=("engine.apply",))
+
+
+def test_vocabulary_is_closed():
+    assert "engine.apply" in FAULT_SEAMS
+    assert set(FAULT_MODES) == {"error", "latency", "nan", "inf", "vmem"}
+
+
+# ------------------------------ firing rules ------------------------------
+
+
+def _fire_pattern(state, n=20):
+    return [
+        state.fire("engine.apply", ("error",), {}) is not None for _ in range(n)
+    ]
+
+
+def test_times_budget_is_exact():
+    state = FaultState(FaultPlan(FaultSpec("engine.apply", times=2)))
+    assert sum(_fire_pattern(state)) == 2
+
+
+def test_unlimited_times_fires_every_consultation():
+    state = FaultState(FaultPlan(FaultSpec("engine.apply")))
+    assert all(_fire_pattern(state))
+
+
+def test_match_filter_gates_on_context():
+    plan = FaultPlan(FaultSpec("engine.apply", match={"engine": "radix4"}))
+    state = FaultState(plan)
+    assert state.fire("engine.apply", ("error",), {"engine": "stockham"}) is None
+    assert state.fire("engine.apply", ("error",), {}) is None  # missing field
+    assert state.fire("engine.apply", ("error",), {"engine": "radix4"})
+
+
+def test_seeded_probability_replays_exactly():
+    plan = FaultPlan(FaultSpec("engine.apply", p=0.3), seed=7)
+    a = _fire_pattern(FaultState(plan), n=100)
+    b = _fire_pattern(FaultState(plan), n=100)
+    assert a == b
+    assert 0 < sum(a) < 100  # actually probabilistic, not all-or-nothing
+
+
+def test_different_seeds_differ():
+    a = _fire_pattern(FaultState(FaultPlan(FaultSpec("engine.apply", p=0.5), seed=1)), 100)
+    b = _fire_pattern(FaultState(FaultPlan(FaultSpec("engine.apply", p=0.5), seed=2)), 100)
+    assert a != b
+
+
+def test_fired_fault_emits_event_and_counter():
+    token = push_faults(FaultPlan(FaultSpec("serve.batch", times=1)))
+    try:
+        with obs.capture() as trace:
+            with pytest.raises(InjectedFault):
+                maybe_fail("serve.batch", service="lm")
+        (e,) = trace.select("resilience.fault")
+        assert e["seam"] == "serve.batch"
+        assert e["mode"] == "error"
+        assert e["service"] == "lm"
+    finally:
+        pop_faults(token)
+
+
+# ------------------------------ seam hooks --------------------------------
+
+
+def test_maybe_fail_noop_without_plan():
+    assert active_faults() is None
+    maybe_fail("engine.apply")  # must not raise
+
+
+def test_error_fault_raises_injected_fault():
+    token = push_faults(FaultPlan(FaultSpec("plan.cache.load", message="boom")))
+    try:
+        with pytest.raises(InjectedFault, match="boom") as ei:
+            maybe_fail("plan.cache.load", path="/x")
+        assert ei.value.seam == "plan.cache.load"
+        assert ei.value.mode == "error"
+    finally:
+        pop_faults(token)
+
+
+def test_vmem_fault_message_mimics_xla():
+    token = push_faults(FaultPlan(FaultSpec("engine.apply", mode="vmem")))
+    try:
+        with pytest.raises(InjectedFault, match="RESOURCE_EXHAUSTED"):
+            maybe_fail("engine.apply")
+    finally:
+        pop_faults(token)
+
+
+def test_latency_fault_stalls_then_returns():
+    import time
+
+    token = push_faults(
+        FaultPlan(FaultSpec("plan.measure", mode="latency", latency_s=0.02))
+    )
+    try:
+        t0 = time.perf_counter()
+        maybe_fail("plan.measure")  # returns, does not raise
+        assert time.perf_counter() - t0 >= 0.015
+    finally:
+        pop_faults(token)
+
+
+@pytest.mark.parametrize("mode,bad", [("nan", np.isnan), ("inf", np.isinf)])
+def test_maybe_corrupt_poisons_origin(mode, bad):
+    token = push_faults(FaultPlan(FaultSpec("engine.apply", mode=mode)))
+    try:
+        out = np.asarray(maybe_corrupt("engine.apply", np.ones((3, 4))))
+        assert bad(out[0, 0])
+        assert np.isfinite(out).sum() == out.size - 1  # exactly one element
+    finally:
+        pop_faults(token)
+
+
+def test_maybe_corrupt_passthrough_without_plan():
+    x = np.ones(4)
+    assert maybe_corrupt("engine.apply", x) is x
+
+
+def test_vmem_exhausted_is_non_raising():
+    assert vmem_exhausted("kernel.fused") is False
+    token = push_faults(FaultPlan(FaultSpec("kernel.fused", mode="vmem", times=1)))
+    try:
+        assert vmem_exhausted("kernel.fused") is True
+        assert vmem_exhausted("kernel.fused") is False  # budget spent
+    finally:
+        pop_faults(token)
+
+
+# --------------------------- xfft.config scoping ---------------------------
+
+
+def test_config_scopes_faults_like_observe():
+    plan = FaultPlan(FaultSpec("engine.apply"))
+    assert active_faults() is None
+    with xfft.config(faults=plan):
+        assert active_faults() is not None
+        assert active_faults().plan is plan
+        with xfft.config(faults=False):  # inner scope turns chaos off
+            assert active_faults() is None
+        assert active_faults() is not None
+    assert active_faults() is None
+
+
+def test_config_rejects_non_plan_faults():
+    with pytest.raises((TypeError, ValueError)):
+        with xfft.config(faults="chaos"):
+            pass
+
+
+def test_config_rejects_unknown_check_health():
+    with pytest.raises(ValueError):
+        with xfft.config(check_health="inf"):
+            pass
+
+
+def test_config_check_health_scoped():
+    from repro.xfft import get_config
+
+    assert get_config().check_health == "off"
+    with xfft.config(check_health="nan"):
+        assert get_config().check_health == "nan"
+    assert get_config().check_health == "off"

@@ -1,0 +1,151 @@
+"""Degradation-ladder tests: the PR's acceptance flow, end to end.
+
+With a FaultPlan injecting a deterministic failure into the first-choice
+engine, ``xfft.fft2`` must return numpy-parity output, emit a
+``resilience.failover`` event naming the quarantined engine, serve the
+next call from the fallback without re-failing, and close the breaker
+after cooldown via a successful half-open probe — all asserted from the
+obs event stream.
+"""
+
+import numpy as np
+import pytest
+
+import repro.xfft as xfft
+from repro import obs
+from repro.plan import resolve_call
+from repro.resilience import FaultPlan, FaultSpec, InjectedFault, configure, reset
+
+
+SHAPE = (8, 8)
+
+
+def _frame(rng):
+    return (
+        rng.standard_normal(SHAPE) + 1j * rng.standard_normal(SHAPE)
+    ).astype(np.complex64)
+
+
+def _first_choice():
+    """The engine the planner picks for SHAPE — the fault target."""
+    variant = resolve_call("fft2d", SHAPE).variant
+    reset()  # the probe resolve must not leak breaker state
+    return variant
+
+
+def _assert_parity(y, x):
+    np.testing.assert_allclose(np.asarray(y), np.fft.fft2(x), rtol=1e-4, atol=1e-4)
+
+
+def test_acceptance_failover_quarantine_and_recovery(fake_clock, rng):
+    configure(cooldown_s=30.0, clock=fake_clock)
+    first = _first_choice()
+    x = _frame(rng)
+    plan = FaultPlan(
+        FaultSpec("engine.apply", mode="error", match={"engine": first}, times=1)
+    )
+    with obs.capture() as trace, xfft.config(faults=plan):
+        _assert_parity(xfft.fft2(x), x)   # fault fires: ladder absorbs it
+        _assert_parity(xfft.fft2(x), x)   # served from fallback, no re-fail
+        fake_clock.now += 31.0            # cooldown passes
+        _assert_parity(xfft.fft2(x), x)   # half-open probe succeeds
+
+    # Exactly one injection — the second call never re-consulted the
+    # benched engine, or the times=1 budget would still have matched it.
+    (fault,) = trace.select("resilience.fault")
+    assert fault["seam"] == "engine.apply"
+
+    (failover,) = trace.select("resilience.failover")
+    assert failover["engine"] == first
+    assert failover["quarantined"] is True
+    assert failover["reason"] == "error"
+    assert failover["kind"] == "fft2d"
+    assert tuple(failover["shape"]) == SHAPE
+    assert failover["next"] is not None and failover["next"] != first
+    assert "InjectedFault" in failover["error"]
+
+    # The planner routed around the bench: the post-fault resolve reports
+    # outcome "quarantined", and the post-cooldown call is a plain hit.
+    outcomes = [e["outcome"] for e in trace.select("plan.resolve")]
+    assert outcomes[1:] == ["quarantined", "hit"]
+
+    # Breaker lifecycle straight from the event stream.
+    states = [e["state"] for e in trace.select("resilience.breaker")]
+    assert states == ["open", "half_open", "closed"]
+    assert all(e["engine"] == first for e in trace.select("resilience.breaker"))
+
+
+def test_failed_engine_never_cached_as_fallback(fake_clock, rng):
+    """Plans resolved under quarantine are workarounds, not wisdom: once
+    the breaker closes, the original first choice serves again."""
+    configure(cooldown_s=30.0, clock=fake_clock)
+    first = _first_choice()
+    x = _frame(rng)
+    plan = FaultPlan(
+        FaultSpec("engine.apply", mode="error", match={"engine": first}, times=1)
+    )
+    with xfft.config(faults=plan):
+        xfft.fft2(x)
+        fake_clock.now += 31.0
+        xfft.fft2(x)  # probe succeeds, breaker closes
+    assert resolve_call("fft2d", SHAPE).variant == first
+
+
+def test_forced_variant_bypasses_ladder(rng):
+    """A pinned engine is an explicit opinion: no injection, no failover."""
+    x = _frame(rng)
+    plan = FaultPlan(FaultSpec("engine.apply", mode="error"))
+    with obs.capture() as trace, xfft.config(variant="stockham", faults=plan):
+        _assert_parity(xfft.fft2(x), x)
+    assert trace.select("resilience.fault") == []
+    assert trace.select("resilience.failover") == []
+
+
+def test_check_health_nan_fails_over(rng):
+    first = _first_choice()
+    x = _frame(rng)
+    plan = FaultPlan(
+        FaultSpec("engine.apply", mode="nan", match={"engine": first}, times=1)
+    )
+    with obs.capture() as trace, xfft.config(faults=plan, check_health="nan"):
+        y = xfft.fft2(x)
+    assert np.isfinite(np.asarray(y)).all()
+    _assert_parity(y, x)
+    (failover,) = trace.select("resilience.failover")
+    assert failover["engine"] == first
+    assert failover["reason"] == "nonfinite"
+    assert failover["error"] is None
+
+
+def test_health_guard_off_by_default(rng):
+    first = _first_choice()
+    x = _frame(rng)
+    plan = FaultPlan(
+        FaultSpec("engine.apply", mode="nan", match={"engine": first}, times=1)
+    )
+    with obs.capture() as trace, xfft.config(faults=plan):
+        y = xfft.fft2(x)
+    assert not np.isfinite(np.asarray(y)).all()  # poison passes through
+    assert trace.select("resilience.failover") == []
+
+
+def test_all_rungs_nonfinite_returns_last_output(rng):
+    """When every rung yields non-finite values the input itself is
+    poisoned: the guard returns the last output instead of raising."""
+    x = _frame(rng)
+    plan = FaultPlan(FaultSpec("engine.apply", mode="inf"))  # every engine
+    with obs.capture() as trace, xfft.config(faults=plan, check_health="nan"):
+        y = xfft.fft2(x)
+    assert not np.isfinite(np.asarray(y)).all()
+    failovers = trace.select("resilience.failover")
+    assert len(failovers) >= 2          # walked more than one rung
+    assert failovers[-1]["next"] is None  # and hit the bottom
+
+
+def test_all_rungs_error_raises_last_error(rng):
+    x = _frame(rng)
+    plan = FaultPlan(FaultSpec("engine.apply", mode="error"))  # every engine
+    with obs.capture() as trace, xfft.config(faults=plan):
+        with pytest.raises(InjectedFault):
+            xfft.fft2(x)
+    assert trace.select("resilience.failover")[-1]["next"] is None

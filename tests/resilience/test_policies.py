@@ -1,0 +1,156 @@
+"""Serving-policy tests: deadlines, bounded retry, load shedding."""
+
+import pytest
+
+import repro.xfft as xfft
+from repro import obs
+from repro.resilience import (
+    DeadlineExceeded,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    Overloaded,
+    ServicePolicy,
+    admit,
+    execute_with_policy,
+)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        ServicePolicy(deadline_s=0)
+    with pytest.raises(ValueError):
+        ServicePolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        ServicePolicy(backoff_s=-0.1)
+    with pytest.raises(ValueError):
+        ServicePolicy(backoff_jitter=-1)
+    with pytest.raises(ValueError):
+        ServicePolicy(max_queue=0)
+
+
+def test_default_policy_is_permissive():
+    p = ServicePolicy()
+    admit(p, 10_000)                       # no shedding
+    assert execute_with_policy(p, lambda: 42) == 42
+
+
+def test_admit_sheds_past_max_queue():
+    p = ServicePolicy(max_queue=4)
+    admit(p, 4)  # at the limit: admitted
+    with obs.capture() as trace:
+        with pytest.raises(Overloaded) as ei:
+            admit(p, 5, service="spectrum")
+    assert ei.value.depth == 5
+    assert ei.value.limit == 4
+    (e,) = trace.select("serve.shed")
+    assert e["depth"] == 5 and e["limit"] == 4 and e["service"] == "spectrum"
+
+
+def test_retry_recovers_from_transient_failure():
+    p = ServicePolicy(max_retries=2, backoff_s=0.01)
+    calls = []
+    slept = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    with obs.capture() as trace:
+        out = execute_with_policy(p, flaky, sleep=slept.append, service="lm")
+    assert out == "ok"
+    assert len(calls) == 3
+    assert len(slept) == 2
+    assert slept[1] > slept[0]  # exponential backoff
+    retries = trace.select("resilience.retry")
+    assert [e["attempt"] for e in retries] == [1, 2]
+    assert all(e["service"] == "lm" for e in retries)
+
+
+def test_retry_budget_exhaustion_propagates_error():
+    p = ServicePolicy(max_retries=1, backoff_s=0.0)
+
+    def always():
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RuntimeError, match="permanent"):
+        execute_with_policy(p, always, sleep=lambda _: None)
+
+
+def test_backoff_jitter_is_seeded():
+    def delays(policy):
+        slept = []
+
+        def flaky():
+            if len(slept) < 3:
+                raise RuntimeError("x")
+            return None
+
+        execute_with_policy(policy, flaky, sleep=slept.append)
+        return slept
+
+    a = delays(ServicePolicy(max_retries=3, backoff_s=0.01, seed=5))
+    b = delays(ServicePolicy(max_retries=3, backoff_s=0.01, seed=5))
+    c = delays(ServicePolicy(max_retries=3, backoff_s=0.01, seed=6))
+    assert a == b
+    assert a != c
+
+
+def test_deadline_bounds_retries():
+    clock = [0.0]
+
+    def tick():
+        return clock[0]
+
+    def failing():
+        clock[0] += 0.6  # each attempt eats over half the budget
+        raise RuntimeError("slow failure")
+
+    p = ServicePolicy(deadline_s=1.0, max_retries=5, backoff_s=0.0)
+    with pytest.raises(DeadlineExceeded) as ei:
+        execute_with_policy(p, failing, clock=tick, sleep=lambda _: None)
+    assert ei.value.deadline_s == 1.0
+    assert ei.value.elapsed_s >= 1.0
+
+
+def test_overloaded_and_deadline_are_never_retried():
+    p = ServicePolicy(max_retries=5, backoff_s=0.0)
+    calls = []
+
+    def shed():
+        calls.append(1)
+        raise Overloaded(10, 1)
+
+    with pytest.raises(Overloaded):
+        execute_with_policy(p, shed, sleep=lambda _: None)
+    assert len(calls) == 1  # backpressure is an answer, not a transient
+
+    calls.clear()
+
+    def over():
+        calls.append(1)
+        raise DeadlineExceeded(1.0, 2.0)
+
+    with pytest.raises(DeadlineExceeded):
+        execute_with_policy(p, over, sleep=lambda _: None)
+    assert len(calls) == 1
+
+
+def test_serve_batch_fault_seam_is_retried():
+    """An injected serve fault takes the same retry path a real one would."""
+    plan = FaultPlan(FaultSpec("serve.batch", mode="error", times=1))
+    p = ServicePolicy(max_retries=1, backoff_s=0.0)
+    with obs.capture() as trace, xfft.config(faults=plan):
+        out = execute_with_policy(p, lambda: "served", sleep=lambda _: None)
+    assert out == "served"
+    (retry,) = trace.select("resilience.retry")
+    assert "InjectedFault" in retry["error"]
+
+
+def test_serve_batch_fault_without_retry_budget_raises():
+    plan = FaultPlan(FaultSpec("serve.batch", mode="error", times=1))
+    with xfft.config(faults=plan):
+        with pytest.raises(InjectedFault):
+            execute_with_policy(ServicePolicy(), lambda: "served")

@@ -1,0 +1,106 @@
+"""Serving hardening through the real services (SpectrumService et al.)."""
+
+import numpy as np
+import pytest
+
+import repro.xfft as xfft
+from repro import obs
+from repro.resilience import (
+    FaultPlan,
+    FaultSpec,
+    Overloaded,
+    ServicePolicy,
+    configure,
+    quarantine,
+)
+from repro.serve.engine import SpectrumRequest, SpectrumService
+from repro.serve.imaging import ImagingService
+
+
+def _requests(rng, n=3, shape=(8, 8)):
+    return [
+        SpectrumRequest(frame=rng.standard_normal(shape).astype(np.float32))
+        for _ in range(n)
+    ]
+
+
+def test_spectrum_service_sheds_past_max_queue(rng):
+    svc = SpectrumService(policy=ServicePolicy(max_queue=2))
+    with obs.capture() as trace:
+        with pytest.raises(Overloaded):
+            svc.serve(_requests(rng, n=3))
+    (e,) = trace.select("serve.shed")
+    assert e["service"] == "spectrum"
+    assert trace.select("serve.batch") == []  # shed BEFORE any group ran
+
+
+def test_spectrum_service_retries_injected_batch_fault(rng):
+    svc = SpectrumService(policy=ServicePolicy(max_retries=1, backoff_s=0.0))
+    reqs = _requests(rng, n=2)
+    plan = FaultPlan(FaultSpec("serve.batch", mode="error", times=1))
+    with obs.capture() as trace, xfft.config(faults=plan):
+        out = svc.serve(reqs)
+    assert all(r.done for r in out)
+    np.testing.assert_allclose(
+        out[0].spectrum, np.fft.rfft2(np.asarray(reqs[0].frame)),
+        rtol=1e-4, atol=1e-4,
+    )
+    assert len(trace.select("resilience.retry")) == 1
+
+
+def test_spectrum_service_fails_over_and_skips_memo(fake_clock, rng):
+    """An engine failure mid-serve: the ladder absorbs it, the workaround
+    plan is NOT memoized, and after cooldown the service re-resolves."""
+    configure(cooldown_s=30.0, clock=fake_clock)
+    svc = SpectrumService()
+    reqs = _requests(rng, n=2)
+    first = None
+    # Probe which engine serves this problem, then reset the bench.
+    out = svc.serve(_requests(rng, n=1))
+    ((_, plan),) = list(svc.plans.items())
+    first = plan.variant
+    svc.plans.clear()
+    from repro.resilience import reset
+
+    reset()
+
+    faults = FaultPlan(
+        FaultSpec("engine.apply", mode="error", match={"engine": first}, times=1)
+    )
+    # One scope for the whole exercise: the times=1 budget must span all
+    # three serves (a fresh scope would re-arm the schedule from seed).
+    with obs.capture() as trace, xfft.config(faults=faults):
+        out = svc.serve(reqs)
+        # Second serve: the memoized plan names the benched engine, so the
+        # service re-resolves around it — and must NOT memoize the
+        # workaround, or the bench would outlive the breaker.
+        svc.serve(_requests(rng, n=1))
+        fake_clock.now += 31.0
+        svc.serve(_requests(rng, n=1))  # half-open probe succeeds
+    assert all(r.done for r in out)
+    np.testing.assert_allclose(
+        out[0].spectrum, np.fft.rfft2(np.asarray(reqs[0].frame)),
+        rtol=1e-4, atol=1e-4,
+    )
+    (failover,) = trace.select("resilience.failover")  # exactly one: no re-fail
+    assert failover["engine"] == first
+    assert "quarantined" in [e["outcome"] for e in trace.select("plan.resolve")]
+    # Only pre-failure resolutions are memoized; no workaround plan landed.
+    assert {p.variant for p in svc.plans.values()} == {first}
+    assert quarantine().table() == []  # probe closed the breaker
+
+
+def test_imaging_service_sheds_whole_queue(rng):
+    from repro.serve.imaging import ConvolutionRequest
+
+    svc = ImagingService(policy=ServicePolicy(max_queue=1))
+    reqs = [
+        ConvolutionRequest(
+            image=rng.standard_normal((8, 8)).astype(np.float32),
+            kernel=np.ones((3, 3), np.float32),
+        )
+        for _ in range(2)
+    ]
+    with pytest.raises(Overloaded):
+        svc.serve(reqs)
+    assert not any(r.done for r in reqs)  # no request half-served
