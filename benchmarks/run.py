@@ -12,8 +12,8 @@ import sys
 
 from benchmarks import accuracy, fft_bench, imaging_bench, obs_bench
 from benchmarks import pencil_overlap, plan_autotune, resilience_bench
-from benchmarks import table1_resources, table2_resources, table5_utilization
-from benchmarks import table6_delay, throughput
+from benchmarks import serve_bench, table1_resources, table2_resources
+from benchmarks import table5_utilization, table6_delay, throughput
 
 ALL = {
     "table1": table1_resources.run,
@@ -28,6 +28,7 @@ ALL = {
     "imaging": imaging_bench.run,
     "obs": obs_bench.run,
     "resilience": resilience_bench.run,
+    "serve": serve_bench.run,
 }
 
 

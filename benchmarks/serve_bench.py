@@ -1,0 +1,251 @@
+"""Serving throughput + tail latency: BENCH_serve.json.
+
+Makes "heavy traffic" a gated number (ROADMAP), two gates:
+
+1. **Continuous batching >= call-scoped batching.** The same backlog of
+   mixed real/complex frames is served two ways under an EQUAL batch
+   budget (at most ``--max-batch`` requests per admitted unit):
+
+   * *call-scoped* — the pre-loop model: ``SpectrumService.serve`` on
+     arrival-order chunks of ``max_batch``. A mixed chunk splits into one
+     sub-batch per problem key, so interleaved traffic pays ~2 engine
+     dispatches per chunk.
+   * *loop* — the same requests stream through ``svc.loop.submit`` and
+     the continuous-batching scheduler coalesces each LANE up to
+     ``max_batch``: full-occupancy batches, half the dispatches.
+
+   Gate: loop requests/sec >= call-scoped requests/sec (median of
+   interleaved reps). p50/p95/p99 per-request latency reported for both.
+
+2. **Warm-started process re-tunes nothing.** A fresh ``PlanCache`` is
+   warm-started from the packaged wisdom artifact
+   (``repro.serve.wisdom``) and a MEASURE-mode service serves an
+   artifact-covered shape. Gate, proven from the event stream: zero
+   ``plan.measure`` spans and every ``plan.resolve`` outcome ``"hit"``.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --out BENCH_serve.json
+  PYTHONPATH=src python -m benchmarks.run serve
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.plan import PlanCache
+from repro.serve import BatchPolicy, SpectrumRequest, SpectrumService, wisdom
+
+try:  # python -m benchmarks.serve_bench (repo root on sys.path)
+    from benchmarks.common import emit
+except ImportError:  # python benchmarks/serve_bench.py
+    from common import emit
+
+
+def _traffic(n_requests: int, size: int, seed: int = 0):
+    """Interleaved real/complex frames: two lanes, worst case for
+    call-scoped chunking (every chunk splits), best case for lane
+    coalescing — the structural difference under test."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        if i % 2 == 0:
+            frame = rng.standard_normal((size, size)).astype(np.float32)
+        else:
+            frame = (
+                rng.standard_normal((size, size))
+                + 1j * rng.standard_normal((size, size))
+            ).astype(np.complex64)
+        reqs.append(SpectrumRequest(frame=frame))
+    return reqs
+
+
+def _quantiles(lat_us: list) -> dict:
+    a = np.sort(np.asarray(lat_us))
+    return {
+        "p50_us": round(float(np.percentile(a, 50)), 1),
+        "p95_us": round(float(np.percentile(a, 95)), 1),
+        "p99_us": round(float(np.percentile(a, 99)), 1),
+    }
+
+
+def _serve_call_scoped(svc, reqs, max_batch) -> list:
+    """Chunked serve; per-request latency = chunk completion - t0 (the
+    whole backlog is present at t0 — a drained queue, both modes)."""
+    t0 = time.perf_counter()
+    lat = []
+    for i in range(0, len(reqs), max_batch):
+        chunk = reqs[i:i + max_batch]
+        svc.serve(chunk)
+        done_at = (time.perf_counter() - t0) * 1e6
+        lat.extend([done_at] * len(chunk))
+    return lat
+
+
+def _serve_loop(svc, reqs) -> list:
+    t0 = time.perf_counter()
+    tickets = [svc.loop.submit(r) for r in reqs]
+    lat = {}
+    while svc.loop.tick(drain=True, raise_errors=True):
+        done_at = (time.perf_counter() - t0) * 1e6
+        for i, t in enumerate(tickets):
+            if t.done and i not in lat:
+                lat[i] = done_at
+    assert len(lat) == len(reqs), "loop left requests unserved"
+    return [lat[i] for i in range(len(reqs))]
+
+
+def bench_throughput(n_requests: int, size: int, max_batch: int, reps: int) -> dict:
+    call_svc = SpectrumService()
+    loop_svc = SpectrumService(batch=BatchPolicy(max_batch=max_batch))
+    # Warm both modes' jit shapes before timing: chunked sub-batches
+    # (~max_batch/2 per lane) and full lane batches (max_batch) compile
+    # to different batched kernels.
+    warm = _traffic(n_requests, size, seed=99)
+    _serve_call_scoped(call_svc, warm, max_batch)
+    _serve_loop(loop_svc, _traffic(n_requests, size, seed=98))
+
+    call_runs, loop_runs = [], []
+    for rep in range(reps):
+        reqs = _traffic(n_requests, size, seed=rep)
+        order = (  # interleave which mode goes first: kill drift bias
+            [("call", call_svc), ("loop", loop_svc)]
+            if rep % 2 == 0
+            else [("loop", loop_svc), ("call", call_svc)]
+        )
+        for mode, svc in order:
+            t0 = time.perf_counter()
+            if mode == "call":
+                lat = _serve_call_scoped(svc, _traffic(n_requests, size, seed=rep),
+                                         max_batch)
+                call_runs.append((time.perf_counter() - t0, lat))
+            else:
+                lat = _serve_loop(svc, reqs)
+                loop_runs.append((time.perf_counter() - t0, lat))
+
+    def median_run(runs):
+        runs = sorted(runs, key=lambda r: r[0])
+        return runs[len(runs) // 2]
+
+    call_s, call_lat = median_run(call_runs)
+    loop_s, loop_lat = median_run(loop_runs)
+    call_rps = n_requests / call_s
+    loop_rps = n_requests / loop_s
+    with obs.capture() as trace:
+        _serve_loop(loop_svc, _traffic(n_requests, size, seed=1234))
+    dispatches = len(trace.select("serve.batch"))
+    return {
+        "requests": n_requests,
+        "size": size,
+        "max_batch": max_batch,
+        "reps": reps,
+        "call_scoped": {
+            "rps": round(call_rps, 1),
+            "total_s": round(call_s, 4),
+            **_quantiles(call_lat),
+        },
+        "loop": {
+            "rps": round(loop_rps, 1),
+            "total_s": round(loop_s, 4),
+            "dispatches": dispatches,
+            **_quantiles(loop_lat),
+        },
+        "speedup": round(loop_rps / call_rps, 3),
+        "ok": loop_rps >= call_rps,
+    }
+
+
+def bench_warm_start(size: int, n_requests: int) -> dict:
+    """A fresh process, warm-started: zero MEASURE sweeps, all hits."""
+    cache = PlanCache()
+    artifact = wisdom.artifact_path()
+    if artifact is None:
+        # no packaged artifact for this backend: generate one (this IS
+        # the measure cost the artifact saves everyone else)
+        cache = wisdom.pretune([size], kinds=("rfft2d",), measure_iters=1)
+        report = {"kept": len(cache), "file_error": "generated in-process"}
+    else:
+        report = wisdom.warm_start(artifact, cache=cache).to_dict()
+    covered = sorted(
+        p.key.shape for _, p in cache.entries() if p.key.kind == "rfft2d"
+    )
+    shape = covered[0] if covered else (size, size)
+    svc = SpectrumService(plan_mode="measure", cache=cache)
+    rng = np.random.default_rng(0)
+    reqs = [
+        SpectrumRequest(frame=rng.standard_normal(shape).astype(np.float32))
+        for _ in range(n_requests)
+    ]
+    with obs.capture() as trace:
+        svc.serve(reqs)
+    measure_spans = len(trace.select("plan.measure"))
+    outcomes = [e["outcome"] for e in trace.select("plan.resolve")]
+    ok = (
+        all(r.done for r in reqs)
+        and report["kept"] > 0
+        and measure_spans == 0
+        and outcomes == ["hit"]
+    )
+    return {
+        "artifact": artifact,
+        "load": report,
+        "served_shape": list(shape),
+        "measure_spans": measure_spans,
+        "resolve_outcomes": outcomes,
+        "ok": ok,
+    }
+
+
+def run() -> None:
+    """benchmarks.run entry point: default sweep, BENCH_serve.json."""
+    main(["--out", "/tmp/BENCH_serve.json"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=96,
+                    help="backlog size per rep")
+    ap.add_argument("--size", type=int, default=64,
+                    help="frame size N (NxN)")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="batch budget for BOTH serving modes")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="interleaved reps (median)")
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    args = ap.parse_args(argv)
+
+    throughput = bench_throughput(
+        args.requests, args.size, args.max_batch, args.reps
+    )
+    warm = bench_warm_start(args.size, n_requests=8)
+    report = {
+        "backend": jax.default_backend(),
+        "throughput": throughput,
+        "warm_start": warm,
+        "ok": throughput["ok"] and warm["ok"],
+    }
+    emit(
+        f"serve_bench/loop/{args.size}",
+        round(throughput["loop"]["total_s"] * 1e6 / args.requests, 2),
+        f"rps={throughput['loop']['rps']} p99={throughput['loop']['p99_us']}",
+    )
+    emit(
+        f"serve_bench/call_scoped/{args.size}",
+        round(throughput["call_scoped"]["total_s"] * 1e6 / args.requests, 2),
+        f"rps={throughput['call_scoped']['rps']}",
+    )
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

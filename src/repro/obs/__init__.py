@@ -4,8 +4,11 @@ The software analog of the paper's control unit + RAM controller
 *accounting*: every decision point in the stack — planner resolution
 (``repro.plan``), MEASURE sweeps, engine dispatch (``repro.engines``),
 fused-kernel VMEM failovers (``repro.kernels``), wisdom load/save, and
-service batching (``repro.serve``) — emits structured events through
-this package.
+service batching (``repro.serve``: queue intake ``serve.queue``, scheduler
+heartbeats ``serve.loop.tick`` with queue-depth gauges, per-lane batch
+spans ``serve.batch``, quarantine-driven re-resolution
+``serve.lane.replan``, wisdom warm starts ``serve.wisdom.warm_start``) —
+emits structured events through this package.
 
     from repro import obs
     import repro.xfft as xfft

@@ -136,8 +136,16 @@ class PlanCache:
 
     # ------------------------------ persistence ------------------------------
 
-    def save(self, path: Optional[str] = None) -> Optional[str]:
+    def save(
+        self, path: Optional[str] = None, *, measured_only: bool = False
+    ) -> Optional[str]:
         """Atomically write all plans to ``path`` (default: ``self.path``).
+
+        ``measured_only=True`` writes only MEASURE-mode plans — the form a
+        wisdom *artifact* ships in (``repro.serve.wisdom``): ESTIMATE
+        entries cost nothing to recreate and would pin a heuristic guess
+        over the receiving process's own estimator, so an exported
+        artifact carries only the plans that were actually timed.
 
         The write goes to a temp file in the SAME directory (same
         filesystem, so the rename is atomic), is fsynced, then
@@ -156,10 +164,13 @@ class PlanCache:
         path = path or self.path
         if not path:
             raise ValueError("PlanCache.save needs a path (none configured)")
+        plans = self._plans
+        if measured_only:
+            plans = {k: p for k, p in plans.items() if p.mode == "measure"}
         payload = {
             "file_format": _FILE_FORMAT,
             "plan_schema_version": PLAN_SCHEMA_VERSION,
-            "plans": {k: p.to_dict() for k, p in self._plans.items()},
+            "plans": {k: p.to_dict() for k, p in plans.items()},
         }
         try:
             _faults.maybe_fail("plan.cache.save", path=path)
@@ -189,7 +200,7 @@ class PlanCache:
                 "in-memory caching", path, e,
             )
             return None
-        obs.emit("plan.cache.save", path=path, entries=len(self._plans))
+        obs.emit("plan.cache.save", path=path, entries=len(plans))
         return path
 
     def load(self, path: Optional[str] = None) -> LoadReport:

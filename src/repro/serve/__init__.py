@@ -1,15 +1,34 @@
-from repro.serve.engine import ServeEngine, SpectrumRequest, SpectrumService
+"""Serving layer: one continuous-batching loop behind every service.
+
+``SpectrumService``/``ImagingService``/``ServeEngine`` share the
+:class:`~repro.serve.loop.ServeLoop` scheduler (per-problem-key lanes,
+coalescing, round-robin fairness, ``Overloaded`` backpressure);
+:mod:`repro.serve.wisdom` ships pre-tuned plan caches as artifacts so a
+fresh process serves with zero MEASURE cost.
+"""
+
+from repro.serve import wisdom
+from repro.serve.engine import Request, ServeEngine, SpectrumRequest, SpectrumService
 from repro.serve.imaging import (
     ConvolutionRequest,
     ImagingService,
     RegistrationRequest,
 )
+from repro.serve.loop import ServeLoop
+from repro.serve.queue import AdmissionQueue, BatchPolicy, LaneKey, Ticket
 
 __all__ = [
+    "AdmissionQueue",
+    "BatchPolicy",
+    "ConvolutionRequest",
+    "ImagingService",
+    "LaneKey",
+    "RegistrationRequest",
+    "Request",
     "ServeEngine",
+    "ServeLoop",
     "SpectrumRequest",
     "SpectrumService",
-    "ImagingService",
-    "RegistrationRequest",
-    "ConvolutionRequest",
+    "Ticket",
+    "wisdom",
 ]

@@ -1,9 +1,13 @@
-"""Batched serving engines.
+"""Batched serving engines over the shared continuous-batching loop.
 
 * :class:`ServeEngine` — LM serving: prefill + jitted decode steps over the
   Model API. Supports every cache family (dense KV, SWA ring, MLA latent,
   SSM/xLSTM state) because it only ever touches the Model's cache pytree
-  opaquely, with a minimal continuous-batching slot manager.
+  opaquely. Requests route through the same :class:`repro.serve.loop.
+  ServeLoop` lane machinery as the FFT services — lanes are power-of-two
+  prompt-length buckets, so a batch never pads a short prompt to an
+  unrelated long one (the per-call slot manager this replaces had no
+  problem-key grouping at all).
 * :class:`SpectrumService` — the paper's 2D-FFT processor as a service:
   plan-aware batching groups frame requests by problem key (shape ×
   realness × direction), tunes ONE plan per group through ``repro.plan``,
@@ -14,19 +18,27 @@
   registry via ``resolve_call``: a scoped ``xfft.config(precision=
   "double")`` or ``config(backend=...)`` around ``serve()`` steers the
   whole service (and its wisdom keys) without any API change here.
+
+Both services delegate admission, lane queues, coalescing and fairness
+to their :class:`ServeLoop` (``svc.loop``): ``serve()`` stays the
+call-scoped contract it always was, while ``svc.loop.submit()`` /
+``svc.loop.start()`` expose the same service as a streaming,
+continuously-batching endpoint.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.resilience.policies import ServicePolicy, admit, execute_with_policy
+from repro.resilience.policies import ServicePolicy, execute_with_policy
+from repro.serve.loop import LaneKey, ServeLoop, record_lane_key
+from repro.serve.queue import BatchPolicy
 
 
 @dataclasses.dataclass
@@ -38,8 +50,11 @@ class Request:
 
 
 class ServeEngine:
+    name = "lm"
+
     def __init__(self, model, params, *, batch: int, max_len: int, dtype=jnp.float32,
-                 policy: ServicePolicy | None = None):
+                 policy: ServicePolicy | None = None,
+                 batch_policy: BatchPolicy | None = None):
         self.model = model
         self.params = params
         self.batch = batch
@@ -52,6 +67,18 @@ class ServeEngine:
         self.caches = model.init_cache_fn(batch, max_len, dtype)
         self._decode = jax.jit(model.decode_fn)
         self._prefill = jax.jit(model.prefill_fn)
+        self._extras: dict | None = None
+        if batch_policy is None:
+            batch_policy = BatchPolicy(max_batch=batch)
+        elif batch_policy.max_batch is None or batch_policy.max_batch > batch:
+            # the model was compiled for `batch` slots; a lane batch can
+            # never exceed them
+            batch_policy = dataclasses.replace(batch_policy, max_batch=batch)
+        self.loop = ServeLoop(
+            self._classify, self._execute_lane, service=self.name,
+            policy=self.policy, batch=batch_policy,
+            queue_fields=self._queue_fields,
+        )
 
     def generate(self, prompts: list[np.ndarray], max_new: int = 16,
                  extras: dict | None = None) -> list[list[int]]:
@@ -75,57 +102,66 @@ class ServeEngine:
             pos += 1
         return outs
 
+    # --------------------------- lane machinery ---------------------------
+
+    def _classify(self, r: Any) -> LaneKey:
+        if not isinstance(r, Request):
+            raise TypeError(f"expected Request, got {type(r)!r}")
+        s = len(np.asarray(r.prompt))
+        if not 0 < s <= self.max_len:
+            raise ValueError(
+                f"prompt length must be in 1..{self.max_len}, got {s}"
+            )
+        # pow2 length buckets: prompts in one lane pad to at most 2x the
+        # shortest member, instead of to the longest prompt in the call
+        bucket = min(1 << (s - 1).bit_length(), self.max_len)
+        return LaneKey(self.name, (bucket,))
+
+    def _queue_fields(self, requests, lanes) -> dict:
+        return {"slots": self.batch, "lanes": len(set(lanes))}
+
+    def _execute_lane(self, lane: LaneKey, members: list[Request]) -> None:
+        s = max(len(a.prompt) for a in members)
+        toks = np.zeros((self.batch, s), np.int32)
+        for i, a in enumerate(members):
+            toks[i, s - len(a.prompt):] = a.prompt
+        with obs.span(
+            "serve.batch",
+            service=self.name,
+            batch=len(members),
+            slots=self.batch,
+            queued=self.loop.queue.depth(),
+            prompt_len=s,
+        ):
+            outs = execute_with_policy(
+                self.policy,
+                lambda: self.generate(
+                    [toks[i] for i in range(self.batch)],
+                    max_new=max(a.max_new for a in members),
+                    extras=self._extras,
+                ),
+                service=self.name,
+            )
+        for i, a in enumerate(members):
+            a.out = outs[i][: a.max_new]
+            a.done = True
+
     def serve_queue(self, queue: list[Request], extras: dict | None = None) -> list[Request]:
-        """Continuous batching: process a request queue with ``batch`` slots,
-        refilling finished slots from the queue (prompts padded to equal S).
+        """Continuous batching: serve a request queue through the loop's
+        prompt-length lanes, at most ``batch`` requests per execution.
 
         Under a bounding :class:`repro.resilience.ServicePolicy`, a queue
         deeper than ``max_queue`` is rejected whole with ``Overloaded``
         (shed at admission — no request is half-served), and each batch
         step runs with the policy's deadline/retry envelope.
         """
-        admit(self.policy, len(queue), service="lm")
-        pending = list(queue)
-        active: list[Request | None] = [None] * self.batch
-        results: list[Request] = []
-        obs.emit("serve.queue", service="lm", depth=len(pending), slots=self.batch)
-        while pending or any(a is not None for a in active):
-            for i in range(self.batch):
-                if active[i] is None and pending:
-                    active[i] = pending.pop(0)
-            # all-slot prefill is the simple (and restartable) policy:
-            live = [a for a in active if a is not None]
-            if not live:
-                break
-            s = max(len(a.prompt) for a in live)
-            toks = np.zeros((self.batch, s), np.int32)
-            for i, a in enumerate(active):
-                if a is not None:
-                    toks[i, s - len(a.prompt):] = a.prompt
-            with obs.span(
-                "serve.batch",
-                service="lm",
-                batch=len(live),
-                slots=self.batch,
-                queued=len(pending),
-                prompt_len=s,
-            ):
-                outs = execute_with_policy(
-                    self.policy,
-                    lambda: self.generate(
-                        [toks[i] for i in range(self.batch)],
-                        max_new=max(a.max_new for a in live),
-                        extras=extras,
-                    ),
-                    service="lm",
-                )
-            for i, a in enumerate(active):
-                if a is not None:
-                    a.out = outs[i][: a.max_new]
-                    a.done = True
-                    results.append(a)
-                    active[i] = None
-        return results
+        requests = list(queue)
+        self._extras = extras
+        try:
+            self.loop.serve(requests)
+        finally:
+            self._extras = None
+        return requests
 
 
 # ----------------------- plan-aware 2D-FFT serving ------------------------
@@ -148,11 +184,20 @@ class SpectrumService:
     ONE tuned plan (``repro.plan``) serves a whole group as a single
     batched transform, instead of re-deciding the schedule per frame.
     Plans are cached across ``serve`` calls; with a MEASURE-mode,
-    file-backed cache a service tunes once per shape for its lifetime.
+    file-backed cache (or a :mod:`repro.serve.wisdom` warm start) a
+    service tunes once per shape for its lifetime.
+
+    Scheduling lives in ``self.loop`` (:class:`repro.serve.loop.
+    ServeLoop`): ``serve()`` is the call-scoped entry, ``loop.submit()``
+    the streaming one, and a ``batch`` :class:`BatchPolicy` bounds
+    coalescing for both.
     """
 
+    name = "spectrum"
+
     def __init__(self, plan_mode: str | None = None, cache=None,
-                 policy: ServicePolicy | None = None):
+                 policy: ServicePolicy | None = None,
+                 batch: BatchPolicy | None = None):
         # None defers to the scoped repro.xfft.config mode, so an operator's
         # `xfft.config(mode="measure")` tunes the service exactly as it
         # tunes direct calls; an explicit plan_mode pins the policy.
@@ -162,6 +207,53 @@ class SpectrumService:
         self.cache = cache
         self.policy = policy if policy is not None else ServicePolicy()
         self.plans: dict = {}               # (config, cache_key) -> FFTPlan memo
+        self.loop = ServeLoop(
+            self._classify, self._execute_lane, service=self.name,
+            policy=self.policy, batch=batch, queue_fields=self._queue_fields,
+        )
+
+    # --------------------------- lane machinery ---------------------------
+
+    def _classify(self, r: Any) -> LaneKey:
+        if not isinstance(r, SpectrumRequest):
+            raise TypeError(f"expected SpectrumRequest, got {type(r)!r}")
+        frame = np.asarray(r.frame)
+        if frame.ndim != 2:
+            raise ValueError(f"expected a (H, W) frame, got {frame.shape}")
+        real = not np.iscomplexobj(frame)
+        return LaneKey("spectrum", (frame.shape, real))
+
+    def _queue_fields(self, requests, lanes) -> dict:
+        return {"groups": len(set(lanes))}
+
+    def _execute_lane(self, lane: LaneKey, members: list) -> None:
+        self._execute_spectra(lane, members)
+
+    def _execute_spectra(self, lane: LaneKey, members: list) -> None:
+        from repro.plan import execute
+
+        shape, real = lane.signature
+        batch = np.stack([np.asarray(r.frame) for r in members])
+        kind = "rfft2d" if real else "fft2d"
+        dtype = "float32" if real else "complex64"
+        # Plan under the per-frame shape: the schedule depends on the
+        # frame geometry, not on how many requests happened to arrive,
+        # so varying batch sizes never trigger a re-tune.
+        plan = self._plan_for(kind, shape, dtype)
+        with obs.span(
+            "serve.batch", service="spectrum", kind=kind, shape=shape,
+            batch=len(members), variant=plan.variant,
+        ):
+            out = np.asarray(execute_with_policy(
+                self.policy,
+                lambda: execute(plan, jnp.asarray(batch)),
+                service="spectrum", kind=kind,
+            ))
+        for j, r in enumerate(members):
+            r.spectrum = out[j]
+            r.done = True
+
+    # ------------------------------ planning ------------------------------
 
     def _plan_for(self, kind: str, shape, dtype: str):
         from repro.plan import problem_key, resolve_call
@@ -175,11 +267,19 @@ class SpectrumService:
         # active config too, so a scoped override neither reads nor
         # leaves stale memo entries.
         pk = problem_key(kind, shape, dtype)
+        record_lane_key(self.name, pk.cache_key())
         memo_key = (get_config(), pk.cache_key())
         plan = self.plans.get(memo_key)
         breaker = quarantine()
         if plan is not None and breaker.excluded(plan.variant, pk):
-            plan = None  # memoized engine is benched: re-resolve around it
+            # memoized engine is benched: re-resolve around it — the lane
+            # keeps serving instead of stalling on the quarantined engine
+            obs.emit(
+                "serve.lane.replan", service=self.name,
+                key=pk.cache_key(), engine=plan.variant,
+            )
+            obs.count(f"serve.replan.{self.name}")
+            plan = None
         if plan is None:
             plan = resolve_call(kind, shape, dtype=dtype, mode=self.plan_mode,
                                 cache=self.cache)
@@ -190,6 +290,8 @@ class SpectrumService:
                 self.plans[memo_key] = plan
         return plan
 
+    # ------------------------------- entry -------------------------------
+
     def serve(self, requests: list[SpectrumRequest]) -> list[SpectrumRequest]:
         """Transform every request in-place; returns the same list.
 
@@ -197,38 +299,4 @@ class SpectrumService:
         sheds with ``Overloaded`` before any group executes. Each group
         then runs under the policy's deadline/retry envelope.
         """
-        from repro.plan import execute
-
-        admit(self.policy, len(requests), service="spectrum")
-        groups: dict = {}
-        for i, r in enumerate(requests):
-            frame = np.asarray(r.frame)
-            if frame.ndim != 2:
-                raise ValueError(f"request {i}: expected a (H, W) frame, got {frame.shape}")
-            real = not np.iscomplexobj(frame)
-            groups.setdefault((frame.shape, real), []).append(i)
-        obs.emit(
-            "serve.queue", service="spectrum", depth=len(requests),
-            groups=len(groups),
-        )
-        for (shape, real), idxs in groups.items():
-            batch = np.stack([np.asarray(requests[i].frame) for i in idxs])
-            kind = "rfft2d" if real else "fft2d"
-            dtype = "float32" if real else "complex64"
-            # Plan under the per-frame shape: the schedule depends on the
-            # frame geometry, not on how many requests happened to arrive,
-            # so varying batch sizes never trigger a re-tune.
-            plan = self._plan_for(kind, shape, dtype)
-            with obs.span(
-                "serve.batch", service="spectrum", kind=kind, shape=shape,
-                batch=len(idxs), variant=plan.variant,
-            ):
-                out = np.asarray(execute_with_policy(
-                    self.policy,
-                    lambda: execute(plan, jnp.asarray(batch)),
-                    service="spectrum", kind=kind,
-                ))
-            for j, i in enumerate(idxs):
-                requests[i].spectrum = out[j]
-                requests[i].done = True
-        return requests
+        return self.loop.serve(requests)

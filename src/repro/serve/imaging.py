@@ -2,18 +2,21 @@
 
 :class:`ImagingService` extends :class:`SpectrumService` from bare
 transforms to the ``repro.imaging`` operator set, with the same serving
-policy: group requests by PROBLEM KEY, resolve one plan per group
-through ``repro.plan``, and run each group as a single batched call.
+policy: classify requests into PROBLEM-KEY lanes, resolve one plan per
+lane through ``repro.plan``, and run each lane batch as a single call —
+all on the shared :class:`repro.serve.loop.ServeLoop`.
 
-* registration requests group by (frame shape, realness, upsample
+* registration requests lane by (frame shape, realness, upsample
   factor): one ``rfft2``/``irfft2`` round trip registers the whole
-  group, one plan cache entry serves every future batch of that shape;
-* convolution requests group by (image shape, kernel shape, mode,
-  realness): the group shares one ``oaconv2d`` plan — i.e. one
+  batch, one plan cache entry serves every future batch of that shape;
+* convolution requests lane by (image shape, kernel shape, mode,
+  realness): the lane shares one ``oaconv2d`` plan — i.e. one
   overlap-save tile — and the per-request kernels ride the batched
   leading axis of :func:`repro.imaging.tiled.oaconvolve2`;
 * plain :class:`SpectrumRequest` frames still work; a mixed queue is
-  partitioned and each family served by its own grouping.
+  partitioned into lanes and each family served by its own executor —
+  and under the streaming entry (``svc.loop.submit``) the three
+  families coalesce and round-robin through ONE scheduler.
 
 Like the parent, the service honours scoped :func:`repro.xfft.config`
 overrides unless the constructor pinned ``plan_mode``.
@@ -27,8 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.resilience.policies import admit, execute_with_policy
+from repro.resilience.policies import execute_with_policy
 from repro.serve.engine import SpectrumRequest, SpectrumService
+from repro.serve.loop import LaneKey
 
 __all__ = ["RegistrationRequest", "ConvolutionRequest", "ImagingService"]
 
@@ -56,142 +60,130 @@ class ConvolutionRequest:
 
 
 class ImagingService(SpectrumService):
-    """Plan-aware batched serving for spectra, registration and convolution."""
+    """Plan-aware batched serving for spectra, registration and convolution.
 
-    def serve(self, requests: list) -> list:
-        """Process a mixed request queue in-place; returns the same list.
+    One loop, three request families: classification is the only
+    family-specific intake code, so validation stays all-or-nothing (a
+    bad request anywhere in a call fails the call before any lane runs)
+    and admission control sheds the FULL mixed queue before any family
+    is touched.
+    """
 
-        The whole queue is partitioned AND shape-validated before any
-        group executes, so an invalid request fails the call without
-        leaving the queue half-served — and admission control runs on the
-        FULL mixed queue, so an overloaded service sheds before any
-        family is touched.
-        """
-        admit(self.policy, len(requests), service="imaging")
-        spectra, registrations, convolutions = [], [], []
-        for i, r in enumerate(requests):
-            if isinstance(r, SpectrumRequest):
-                spectra.append(r)
-            elif isinstance(r, RegistrationRequest):
-                ref, mov = np.asarray(r.ref), np.asarray(r.mov)
-                if ref.ndim != 2 or ref.shape != mov.shape:
-                    raise ValueError(
-                        f"request {i}: ref/mov must be matching (H, W) "
-                        f"frames, got {ref.shape} vs {mov.shape}"
-                    )
-                registrations.append(r)
-            elif isinstance(r, ConvolutionRequest):
-                image, kernel = np.asarray(r.image), np.asarray(r.kernel)
-                if image.ndim != 2 or kernel.ndim != 2:
-                    raise ValueError(
-                        f"request {i}: image and kernel must be 2D, got "
-                        f"{image.shape} and {kernel.shape}"
-                    )
-                if r.mode not in ("full", "same", "valid"):
-                    raise ValueError(
-                        f'request {i}: mode must be "full", "same" or '
-                        f'"valid", got {r.mode!r}'
-                    )
-                if r.mode == "valid" and (
-                    kernel.shape[0] > image.shape[0]
-                    or kernel.shape[1] > image.shape[1]
-                ):
-                    raise ValueError(
-                        f"request {i}: valid-mode convolution needs "
-                        f"kernel <= image, got {kernel.shape} vs {image.shape}"
-                    )
-                convolutions.append(r)
-            else:
-                raise TypeError(
-                    f"request {i}: expected SpectrumRequest, "
-                    f"RegistrationRequest or ConvolutionRequest, got {type(r)!r}"
+    name = "imaging"
+
+    # --------------------------- lane machinery ---------------------------
+
+    def _classify(self, r) -> LaneKey:
+        if isinstance(r, SpectrumRequest):
+            return super()._classify(r)
+        if isinstance(r, RegistrationRequest):
+            ref, mov = np.asarray(r.ref), np.asarray(r.mov)
+            if ref.ndim != 2 or ref.shape != mov.shape:
+                raise ValueError(
+                    f"ref/mov must be matching (H, W) "
+                    f"frames, got {ref.shape} vs {mov.shape}"
                 )
-        obs.emit(
-            "serve.queue",
-            service="imaging",
-            depth=len(requests),
-            spectra=len(spectra),
-            registrations=len(registrations),
-            convolutions=len(convolutions),
+            real = not (np.iscomplexobj(ref) or np.iscomplexobj(mov))
+            return LaneKey("registration", (ref.shape, real, int(r.upsample)))
+        if isinstance(r, ConvolutionRequest):
+            image, kernel = np.asarray(r.image), np.asarray(r.kernel)
+            if image.ndim != 2 or kernel.ndim != 2:
+                raise ValueError(
+                    f"image and kernel must be 2D, got "
+                    f"{image.shape} and {kernel.shape}"
+                )
+            if r.mode not in ("full", "same", "valid"):
+                raise ValueError(
+                    f'mode must be "full", "same" or '
+                    f'"valid", got {r.mode!r}'
+                )
+            if r.mode == "valid" and (
+                kernel.shape[0] > image.shape[0]
+                or kernel.shape[1] > image.shape[1]
+            ):
+                raise ValueError(
+                    f"valid-mode convolution needs "
+                    f"kernel <= image, got {kernel.shape} vs {image.shape}"
+                )
+            real = not (np.iscomplexobj(image) or np.iscomplexobj(kernel))
+            return LaneKey(
+                "convolution", (image.shape, kernel.shape, r.mode, real)
+            )
+        raise TypeError(
+            f"expected SpectrumRequest, "
+            f"RegistrationRequest or ConvolutionRequest, got {type(r)!r}"
         )
-        if spectra:
-            super().serve(spectra)
-        if registrations:
-            self._serve_registrations(registrations)
-        if convolutions:
-            self._serve_convolutions(convolutions)
-        return requests
 
-    # ------------------------------ groups ------------------------------
+    def _queue_fields(self, requests, lanes) -> dict:
+        families = [lane.family for lane in lanes]
+        return {
+            "spectra": families.count("spectrum"),
+            "registrations": families.count("registration"),
+            "convolutions": families.count("convolution"),
+        }
 
-    def _serve_registrations(self, items) -> None:
+    def _execute_lane(self, lane: LaneKey, members: list) -> None:
+        if lane.family == "registration":
+            self._execute_registrations(lane, members)
+        elif lane.family == "convolution":
+            self._execute_convolutions(lane, members)
+        else:
+            self._execute_spectra(lane, members)
+
+    # ------------------------------ executors ------------------------------
+
+    def _execute_registrations(self, lane: LaneKey, members: list) -> None:
         from repro.imaging import register_phase_correlation
 
-        groups: dict = {}
-        for r in items:
-            ref = np.asarray(r.ref)
-            real = not (
-                np.iscomplexobj(ref) or np.iscomplexobj(np.asarray(r.mov))
-            )
-            groups.setdefault((ref.shape, real, int(r.upsample)), []).append(r)
-        for (shape, real, upsample), members in groups.items():
-            # Warm the plan for the BATCHED problem the group's transform
-            # pair will actually run under ((B, H, W) — xfft keys on the
-            # full shape), so a repeat batch of this shape and size is a
-            # pure cache hit inside register_phase_correlation.
-            self._plan_for(
-                "rfft2d" if real else "fft2d",
-                (len(members), *shape),
-                "float32" if real else "complex64",
-            )
-            refs = jnp.asarray(np.stack([np.asarray(r.ref) for r in members]))
-            movs = jnp.asarray(np.stack([np.asarray(r.mov) for r in members]))
-            with obs.span(
-                "serve.batch", service="registration", shape=shape,
-                batch=len(members), upsample=upsample,
-            ):
-                shifts = np.asarray(execute_with_policy(
-                    self.policy,
-                    lambda: register_phase_correlation(
-                        refs, movs, upsample_factor=upsample
-                    ),
-                    service="registration",
-                ))
-            for r, shift in zip(members, shifts):
-                r.shift = shift
-                r.done = True
+        shape, real, upsample = lane.signature
+        # Warm the plan for the BATCHED problem the lane's transform pair
+        # will actually run under ((B, H, W) — xfft keys on the full
+        # shape), so a repeat batch of this shape and size is a pure
+        # cache hit inside register_phase_correlation.
+        self._plan_for(
+            "rfft2d" if real else "fft2d",
+            (len(members), *shape),
+            "float32" if real else "complex64",
+        )
+        refs = jnp.asarray(np.stack([np.asarray(r.ref) for r in members]))
+        movs = jnp.asarray(np.stack([np.asarray(r.mov) for r in members]))
+        with obs.span(
+            "serve.batch", service="registration", shape=shape,
+            batch=len(members), upsample=upsample,
+        ):
+            shifts = np.asarray(execute_with_policy(
+                self.policy,
+                lambda: register_phase_correlation(
+                    refs, movs, upsample_factor=upsample
+                ),
+                service="registration",
+            ))
+        for r, shift in zip(members, shifts):
+            r.shift = shift
+            r.done = True
 
-    def _serve_convolutions(self, items) -> None:
+    def _execute_convolutions(self, lane: LaneKey, members: list) -> None:
         from repro.imaging import oaconvolve2
 
-        groups: dict = {}
-        for r in items:
-            image = np.asarray(r.image)
-            real = not (
-                np.iscomplexobj(image) or np.iscomplexobj(np.asarray(r.kernel))
-            )
-            groups.setdefault(
-                (image.shape, np.asarray(r.kernel).shape, r.mode, real), []
-            ).append(r)
-        for (ishape, kshape, mode, real), members in groups.items():
-            # One oaconv2d plan per (image, kernel) geometry: every member
-            # shares the tile, kernels ride the batched leading axis.
-            plan = self._plan_for(
-                "oaconv2d",
-                (*ishape, *kshape),
-                "float32" if real else "complex64",
-            )
-            images = jnp.asarray(np.stack([np.asarray(r.image) for r in members]))
-            kernels = jnp.asarray(np.stack([np.asarray(r.kernel) for r in members]))
-            with obs.span(
-                "serve.batch", service="convolution", shape=ishape,
-                kernel=kshape, batch=len(members), tile=plan.tile,
-            ):
-                out = np.asarray(execute_with_policy(
-                    self.policy,
-                    lambda: oaconvolve2(images, kernels, mode=mode, tile=plan.tile),
-                    service="convolution",
-                ))
-            for r, res in zip(members, out):
-                r.out = res
-                r.done = True
+        ishape, kshape, mode, real = lane.signature
+        # One oaconv2d plan per (image, kernel) geometry: every member
+        # shares the tile, kernels ride the batched leading axis.
+        plan = self._plan_for(
+            "oaconv2d",
+            (*ishape, *kshape),
+            "float32" if real else "complex64",
+        )
+        images = jnp.asarray(np.stack([np.asarray(r.image) for r in members]))
+        kernels = jnp.asarray(np.stack([np.asarray(r.kernel) for r in members]))
+        with obs.span(
+            "serve.batch", service="convolution", shape=ishape,
+            kernel=kshape, batch=len(members), tile=plan.tile,
+        ):
+            out = np.asarray(execute_with_policy(
+                self.policy,
+                lambda: oaconvolve2(images, kernels, mode=mode, tile=plan.tile),
+                service="convolution",
+            ))
+        for r, res in zip(members, out):
+            r.out = res
+            r.done = True

@@ -1,0 +1,192 @@
+"""Wisdom artifacts: ship pre-tuned plan caches with the repo (FFTW model).
+
+MEASURE tuning jits and times every candidate engine — seconds per
+problem key. A fleet of servers must not pay that per process: FFTW
+solved this with *wisdom files* exported once and imported everywhere,
+and this module is that model for ``repro.plan``:
+
+* :func:`export` writes the active plan cache's MEASURE entries to a
+  wisdom artifact (atomic, via :meth:`PlanCache.save`);
+* :func:`warm_start` merges an artifact into a fresh process's cache —
+  with the full :class:`~repro.plan.cache.LoadReport` accounting, so
+  "the artifact actually loaded" is a checkable fact, not hope;
+* :func:`pretune` runs the MEASURE sweeps that *produce* wisdom for a
+  list of frame sizes (the generation side of the artifact);
+* :data:`WISDOM_DIR` holds artifacts packaged with the repo itself
+  (``wisdom_files/<backend>.json``): a warm-started serve loop performs
+  **zero** MEASURE sweeps from its first request — the serve benchmark
+  proves this from the event stream.
+
+Plan cache keys embed backend × device-kind × precision
+(``PLAN_SCHEMA_VERSION``), so an artifact tuned on one engine population
+can never poison another: foreign entries simply never match, and stale
+schema versions are dropped (and counted) at load.
+
+Regenerating the packaged artifact (from the repo root)::
+
+    PYTHONPATH=src python -m repro.serve.wisdom --sizes 64,128,256
+
+writes ``src/repro/serve/wisdom_files/<backend>.json`` for the machine's
+default backend.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence, Tuple
+
+from repro import obs
+from repro.plan.cache import LoadReport, PlanCache, default_cache
+
+__all__ = [
+    "WISDOM_DIR",
+    "artifact_path",
+    "export",
+    "pretune",
+    "warm_start",
+]
+
+#: Directory of wisdom artifacts packaged with the repo, one per backend
+#: (named ``<backend>.json`` after ``jax.default_backend()``).
+WISDOM_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "wisdom_files")
+
+
+def _active_cache() -> PlanCache:
+    """The cache the current scope plans against: a scoped ``cache_dir``'s
+    file-backed cache when one is configured, else the process default."""
+    from repro.plan.api import _cache_for_dir
+    from repro.xfft import get_config
+
+    cfg = get_config()
+    if cfg.cache_dir:
+        return _cache_for_dir(cfg.cache_dir)
+    return default_cache()
+
+
+def artifact_path(backend: Optional[str] = None) -> Optional[str]:
+    """Path of the packaged artifact for ``backend`` (default: the live
+    jax backend), or ``None`` when no artifact ships for it."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    path = os.path.join(WISDOM_DIR, f"{backend}.json")
+    return path if os.path.exists(path) else None
+
+
+def export(
+    path: str,
+    cache: Optional[PlanCache] = None,
+    *,
+    measured_only: bool = True,
+) -> str:
+    """Write ``cache`` (default: the active scope's cache) to ``path``.
+
+    Only MEASURE entries ship by default — ESTIMATE plans cost nothing to
+    recreate and would pin one machine's heuristics on another. Raises
+    ``RuntimeError`` when the path is unwritable (an *export* that lands
+    nowhere is an error; the serve path's degrade-to-memory behaviour
+    lives in :meth:`PlanCache.save` and still applies there).
+    """
+    cache = cache if cache is not None else _active_cache()
+    written = cache.save(path, measured_only=measured_only)
+    if written is None:
+        raise RuntimeError(
+            f"wisdom export to {path!r} failed: path is unwritable "
+            f"(see the plan.cache.readonly event for the cause)"
+        )
+    obs.emit(
+        "serve.wisdom.export",
+        path=written,
+        entries=len(cache),
+        measured_only=measured_only,
+    )
+    return written
+
+
+def warm_start(
+    path: Optional[str] = None, cache: Optional[PlanCache] = None
+) -> LoadReport:
+    """Merge a wisdom artifact into ``cache`` (default: the active cache).
+
+    ``path=None`` uses the packaged artifact for the live backend — the
+    zero-config fleet case: call once at startup and every MEASURE-grade
+    plan in the artifact serves without a single sweep. Returns the
+    :class:`LoadReport`; a missing packaged artifact is not an error
+    (``file_error`` says so) because a fresh process can always fall back
+    to tuning itself.
+    """
+    cache = cache if cache is not None else _active_cache()
+    if path is None:
+        path = artifact_path()
+    if path is None:
+        report = LoadReport(file_error="no packaged wisdom artifact for backend")
+    else:
+        report = cache.load(path)
+    obs.emit(
+        "serve.wisdom.warm_start",
+        path=path,
+        kept=report.kept,
+        dropped=report.dropped,
+        file_error=report.file_error,
+    )
+    return report
+
+
+def pretune(
+    sizes: Sequence[int],
+    kinds: Tuple[str, ...] = ("rfft2d", "fft2d"),
+    directions: Tuple[str, ...] = ("fwd",),
+    cache: Optional[PlanCache] = None,
+    measure_iters: int = 3,
+) -> PlanCache:
+    """Run the MEASURE sweeps that produce wisdom for square frames.
+
+    The generation side of an artifact: tunes ``kind × direction`` for
+    every ``N × N`` size into ``cache`` (default: a fresh in-memory
+    cache, so packaged artifacts contain exactly what was asked for).
+    """
+    from repro.plan import plan_fft
+
+    cache = cache if cache is not None else PlanCache()
+    for n in sizes:
+        for kind in kinds:
+            dtype = "float32" if kind.startswith("r") else "complex64"
+            for direction in directions:
+                plan_fft(
+                    kind,
+                    (int(n), int(n)),
+                    dtype=dtype,
+                    mode="measure",
+                    cache=cache,
+                    direction=direction,
+                    measure_iters=measure_iters,
+                )
+    return cache
+
+
+def _main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    import jax
+
+    ap = argparse.ArgumentParser(
+        description="Generate a packaged wisdom artifact (MEASURE sweeps)."
+    )
+    ap.add_argument("--sizes", default="64,128,256",
+                    help="comma-separated square frame sizes")
+    ap.add_argument("--kinds", default="rfft2d,fft2d")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: wisdom_files/<backend>.json)")
+    args = ap.parse_args(argv)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    kinds = tuple(k for k in args.kinds.split(",") if k)
+    out = args.out or os.path.join(WISDOM_DIR, f"{jax.default_backend()}.json")
+    cache = pretune(sizes, kinds=kinds)
+    written = export(out, cache)
+    print(f"wrote {len(cache)} measured plans to {written}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -29,6 +29,7 @@ def report_data(cache=None) -> dict:
     from repro.plan.api import _cache_for_dir
     from repro.plan.cache import default_cache
     from repro.resilience.breaker import quarantine
+    from repro.serve.loop import services_for_key
     from repro.xfft._config import get_config
 
     cfg = get_config()
@@ -53,6 +54,14 @@ def report_data(cache=None) -> dict:
             "degrade_reason": plan.degrade_reason,
             "hits": cache.hit_count(key_str),
         })
+    qrows = []
+    by_service: dict = {}
+    for row in quarantine().table():
+        services = services_for_key(row["key"])
+        row = dict(row, services=list(services))
+        qrows.append(row)
+        for svc in services or ("unassigned",):
+            by_service.setdefault(svc, []).append(row)
     return {
         "config": {
             "variant": cfg.variant,
@@ -75,8 +84,15 @@ def report_data(cache=None) -> dict:
         # Live circuit-breaker state (repro.resilience): one row per
         # non-closed (engine, problem-key) breaker — which engines are
         # benched, for which problems, and how long until a half-open
-        # probe is admitted. Empty when nothing has failed.
-        "resilience": {"quarantine": quarantine().table()},
+        # probe is admitted. Empty when nothing has failed. Each row is
+        # tagged with the serve lanes that plan under its key (the
+        # serve-loop lane registry), and `quarantine_by_service` regroups
+        # the table per service — "which of MY lanes are degraded" for an
+        # operator of one service, not just engine × key.
+        "resilience": {
+            "quarantine": qrows,
+            "quarantine_by_service": by_service,
+        },
         "counters": obs.counters(),
     }
 
@@ -131,17 +147,19 @@ def report(cache=None) -> str:
             f"wisdom save: path {c['readonly_path']} unwritable -> "
             "degraded to in-memory caching"
         )
-    qrows = d["resilience"]["quarantine"]
-    if qrows:
-        lines.append("quarantine:")
-        for q in qrows:
-            line = (
-                f"  {q['engine']:<12} {q['state']:<9} failures={q['failures']}"
-            )
-            if q["state"] == "open":
-                line += f" cooldown={q['cooldown_remaining_s']:.1f}s"
-            line += f"  {q['key']}"
-            lines.append(line)
+    by_service = d["resilience"]["quarantine_by_service"]
+    if by_service:
+        lines.append("quarantine (by service lane):")
+        for svc in sorted(by_service):
+            for q in by_service[svc]:
+                line = (
+                    f"  {svc:<12} {q['engine']:<12} {q['state']:<9} "
+                    f"failures={q['failures']}"
+                )
+                if q["state"] == "open":
+                    line += f" cooldown={q['cooldown_remaining_s']:.1f}s"
+                line += f"  {q['key']}"
+                lines.append(line)
     counters = d["counters"]
     if counters:
         lines.append("counters:")

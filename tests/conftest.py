@@ -65,6 +65,10 @@ def _chaos_faults():
         specs=(
             FaultSpec("engine.apply", mode="error", p=0.01),
             FaultSpec("kernel.fused", mode="vmem", p=0.02),
+            # latency (not error) on the serve seam: every batched serve
+            # execution consults it, so the ServicePolicy deadline/retry
+            # envelope is exercised in CI without failing any batch
+            FaultSpec("serve.batch", mode="latency", p=0.1, latency_s=0.002),
         ),
         seed=int(seed),
     )

@@ -1,0 +1,38 @@
+"""Serve-suite fixtures: clean breaker + lane registry per test.
+
+The quarantine registry and the serve-loop lane->key registry are both
+process-wide (by design: ``xfft.report()`` groups the quarantine table
+by service through them), so a test that opens a breaker or records
+lanes must not leak into the next test.
+"""
+
+import time
+
+import pytest
+
+from repro.resilience import configure, reset
+from repro.serve.loop import reset_lane_keys
+
+
+@pytest.fixture(autouse=True)
+def _clean_serve_state():
+    reset()
+    configure(threshold=1, cooldown_s=30.0, clock=time.monotonic)
+    reset_lane_keys()
+    yield
+    reset()
+    configure(threshold=1, cooldown_s=30.0, clock=time.monotonic)
+    reset_lane_keys()
+
+
+@pytest.fixture
+def fake_clock():
+    """A settable clock: ``clock.now += 31.0`` drives a cooldown."""
+
+    class _Clock:
+        now = 0.0
+
+        def __call__(self):
+            return self.now
+
+    return _Clock()

@@ -57,3 +57,38 @@ def test_continuous_batching_queue(engine):
     done = eng.serve_queue(list(queue))
     assert len(done) == 5
     assert all(r.done and len(r.out) == 3 for r in done)
+
+
+def test_prompt_length_buckets_group_into_lanes(engine):
+    """The LM path routes through the shared lane machinery: mixed prompt
+    lengths split into pow2 buckets, so a short prompt is never padded to
+    an unrelated long one in its batch (the pre-loop slot manager padded
+    every batch to the longest live prompt)."""
+    from repro import obs
+
+    cfg, model, params, eng = engine
+    rng = np.random.default_rng(3)
+    short = [
+        Request(prompt=rng.integers(0, cfg.vocab, (4,)).astype(np.int32), max_new=2)
+        for _ in range(2)
+    ]
+    long = [
+        Request(prompt=rng.integers(0, cfg.vocab, (30,)).astype(np.int32), max_new=2)
+        for _ in range(2)
+    ]
+    with obs.capture() as trace:
+        done = eng.serve_queue(short + long)
+    assert len(done) == 4 and all(r.done for r in done)
+    q = trace.first("serve.queue")
+    assert q["service"] == "lm" and q["lanes"] == 2
+    batches = sorted(e["prompt_len"] for e in trace.select("serve.batch"))
+    assert batches == [4, 30]  # short batch padded to 4, not to 30
+
+
+def test_oversized_prompt_rejected(engine):
+    cfg, model, params, eng = engine
+    too_long = Request(prompt=np.zeros((65,), np.int32))  # max_len is 64
+    import pytest as _pytest
+
+    with _pytest.raises(ValueError, match="request 0: prompt length"):
+        eng.serve_queue([too_long])

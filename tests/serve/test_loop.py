@@ -1,0 +1,281 @@
+"""ServeLoop: continuous batching, fairness, backpressure, quarantine.
+
+The toy-executor tests drive the scheduler itself (no jax, no planner);
+the SpectrumService tests prove the integration — streaming submits
+through the real planner/engine path, including the acceptance
+criterion: benching a lane's engine mid-stream produces exactly one
+``resilience.failover`` and the lane keeps serving with parity.
+"""
+
+import numpy as np
+import pytest
+
+import repro.xfft as xfft
+from repro import obs
+from repro.resilience import (
+    FaultPlan,
+    FaultSpec,
+    Overloaded,
+    ServicePolicy,
+    configure,
+    quarantine,
+)
+from repro.serve import (
+    BatchPolicy,
+    LaneKey,
+    ServeLoop,
+    SpectrumRequest,
+    SpectrumService,
+)
+from repro.serve.loop import record_lane_key, services_for_key
+
+
+def _toy_loop(batches, **kw):
+    """A loop whose executor just records (lane, members) per batch."""
+
+    def classify(r):
+        return LaneKey(r["lane"], ())
+
+    def execute(lane, members):
+        batches.append((lane.family, list(members)))
+        for m in members:
+            m["served"] = True
+
+    return ServeLoop(classify, execute, service="toy", **kw)
+
+
+def _reqs(lane, n):
+    return [{"lane": lane, "i": i, "served": False} for i in range(n)]
+
+
+# ------------------------------ scheduling ------------------------------
+
+
+def test_lane_coalescing_respects_max_batch():
+    batches = []
+    loop = _toy_loop(batches, batch=BatchPolicy(max_batch=4))
+    for r in _reqs("a", 10):
+        loop.submit(r)
+    served = loop.drain()
+    assert served == 10
+    assert [len(m) for _, m in batches] == [4, 4, 2]
+    assert all(m["served"] for _, ms in batches for m in ms)
+
+
+def test_lanes_coalesce_across_interleaved_arrival_order():
+    batches = []
+    loop = _toy_loop(batches, batch=BatchPolicy(max_batch=8))
+    reqs = [r for pair in zip(_reqs("a", 4), _reqs("b", 4)) for r in pair]
+    loop.serve(reqs)
+    # interleaved a/b/a/b arrivals still form ONE batch per lane
+    assert sorted((fam, len(ms)) for fam, ms in batches) == [("a", 4), ("b", 4)]
+
+
+def test_round_robin_prevents_lane_starvation():
+    """Sustained load on a hot lane must not starve a quiet one: the
+    quiet lane's single request is served within one rotation, not after
+    the hot backlog empties."""
+    batches = []
+    loop = _toy_loop(batches, batch=BatchPolicy(max_batch=2))
+    for r in _reqs("hot", 8):
+        loop.submit(r)
+    quiet = _reqs("quiet", 1)[0]
+    loop.submit(quiet)
+    loop.tick(drain=True)   # hot dispatches first (older lane)...
+    loop.tick(drain=True)   # ...then the rotation reaches quiet
+    assert quiet["served"], [fam for fam, _ in batches]
+    assert [fam for fam, _ in batches] == ["hot", "quiet"]
+    # the hot backlog is still pending — fairness, not preemption
+    assert loop.queue.depth() == 6
+    loop.drain()
+    assert loop.queue.depth() == 0
+
+
+def test_max_wait_window_holds_then_releases(fake_clock):
+    """A non-full lane waits out the coalescing window, then dispatches."""
+    batches = []
+    loop = _toy_loop(
+        batches, batch=BatchPolicy(max_batch=4, max_wait_s=1.0),
+        clock=fake_clock,
+    )
+    loop.submit(_reqs("a", 1)[0])
+    assert loop.tick() == 0          # inside the window: hold for more
+    fake_clock.now += 0.5
+    loop.submit(_reqs("a", 1)[0])
+    assert loop.tick() == 0
+    fake_clock.now += 0.6            # oldest ticket now past max_wait_s
+    assert loop.tick() == 2          # both coalesced into one batch
+    assert [len(ms) for _, ms in batches] == [2]
+
+
+def test_full_lane_dispatches_inside_wait_window(fake_clock):
+    batches = []
+    loop = _toy_loop(
+        batches, batch=BatchPolicy(max_batch=2, max_wait_s=60.0),
+        clock=fake_clock,
+    )
+    for r in _reqs("a", 2):
+        loop.submit(r)
+    assert loop.tick() == 2          # full lane: no need to wait
+
+
+# ---------------------------- backpressure ----------------------------
+
+
+def test_streaming_shed_at_max_queue_never_drops_admitted():
+    batches = []
+    loop = _toy_loop(batches, policy=ServicePolicy(max_queue=2))
+    t1 = loop.submit(_reqs("a", 1)[0])
+    t2 = loop.submit(_reqs("b", 1)[0])
+    with obs.capture() as trace:
+        with pytest.raises(Overloaded) as ei:
+            loop.submit(_reqs("a", 1)[0])
+    assert ei.value.depth == 3 and ei.value.limit == 2
+    (shed,) = trace.select("serve.shed")
+    assert shed["service"] == "toy" and shed["lane"] == "a[]"
+    # the two admitted requests still drain — shed rejects, never drops
+    loop.drain()
+    assert t1.done and t2.done
+    assert t1.result()["served"] and t2.result()["served"]
+
+
+def test_call_scoped_serve_sheds_whole_call():
+    loop = _toy_loop([], policy=ServicePolicy(max_queue=2))
+    reqs = _reqs("a", 3)
+    with pytest.raises(Overloaded):
+        loop.serve(reqs)
+    assert not any(r["served"] for r in reqs)
+    assert loop.queue.depth() == 0   # nothing half-admitted
+
+
+def test_classify_error_prefixes_request_index():
+    def classify(r):
+        raise ValueError("boom")
+
+    loop = ServeLoop(classify, lambda lane, ms: None, service="toy")
+    with pytest.raises(ValueError, match="request 0: boom"):
+        loop.serve([{"lane": "a"}])
+
+
+# ------------------------------ tickets ------------------------------
+
+
+def test_ticket_carries_batch_error_to_submitter():
+    def execute(lane, members):
+        raise RuntimeError("lane exploded")
+
+    loop = ServeLoop(lambda r: LaneKey("a", ()), execute, service="toy")
+    t = loop.submit({"x": 1})
+    with obs.capture() as trace:
+        served = loop.tick(drain=True)
+    assert served == 1 and t.done
+    with pytest.raises(RuntimeError, match="lane exploded"):
+        t.result()
+    (err,) = trace.select("serve.lane.error")
+    assert err["service"] == "toy" and err["lane"] == "a[]"
+
+
+def test_tick_emits_depth_gauge_and_lane_label():
+    loop = _toy_loop([], batch=BatchPolicy(max_batch=2))
+    for r in _reqs("a", 3):
+        loop.submit(r)
+    with obs.capture() as trace:
+        loop.tick()
+    (tick,) = trace.select("serve.loop.tick")
+    assert tick["service"] == "toy" and tick["lane"] == "a[]"
+    assert tick["batch"] == 2 and tick["depth"] == 1  # gauge: 1 left behind
+
+
+# --------------------------- background thread ---------------------------
+
+
+def test_background_loop_serves_streaming_submits():
+    batches = []
+    loop = _toy_loop(batches, batch=BatchPolicy(max_batch=4)).start()
+    try:
+        tickets = [loop.submit(r) for r in _reqs("a", 6)]
+        for t in tickets:
+            assert t.wait(timeout=5.0), "background loop never served ticket"
+        assert all(t.result()["served"] for t in tickets)
+    finally:
+        loop.stop()
+    assert loop.queue.depth() == 0
+
+
+# ----------------------- lane -> key registry -----------------------
+
+
+def test_lane_key_registry_groups_by_service():
+    record_lane_key("spectrum", "v5|k1")
+    record_lane_key("imaging", "v5|k1")
+    record_lane_key("imaging", "v5|k2")
+    assert services_for_key("v5|k1") == ("imaging", "spectrum")
+    assert services_for_key("v5|k2") == ("imaging",)
+    assert services_for_key("v5|unknown") == ()
+
+
+# ------------------- SpectrumService over the loop -------------------
+
+
+def test_streaming_submits_match_call_scoped_parity(rng):
+    svc = SpectrumService(batch=BatchPolicy(max_batch=4))
+    frames = [rng.standard_normal((8, 8)).astype(np.float32) for _ in range(6)]
+    tickets = [svc.loop.submit(SpectrumRequest(frame=f)) for f in frames]
+    svc.loop.drain()
+    for t, f in zip(tickets, frames):
+        np.testing.assert_allclose(
+            t.result().spectrum, np.fft.rfft2(f), rtol=1e-4, atol=1e-4
+        )
+    assert len(svc.plans) == 1  # batches of 4 and 2 share one plan
+
+
+def test_benched_engine_mid_stream_keeps_lane_serving(fake_clock, rng):
+    """Acceptance criterion: bench a lane's engine mid-stream -> exactly
+    one resilience.failover, the lane re-resolves (serve.lane.replan) and
+    keeps serving with parity."""
+    configure(cooldown_s=30.0, clock=fake_clock)
+    svc = SpectrumService(batch=BatchPolicy(max_batch=2))
+    frames = [rng.standard_normal((8, 8)).astype(np.float32) for _ in range(6)]
+
+    # probe which engine serves this lane, then reset the bench
+    svc.serve([SpectrumRequest(frame=frames[0])])
+    ((_, plan),) = list(svc.plans.items())
+    first = plan.variant
+    from repro.resilience import reset
+
+    reset()
+
+    faults = FaultPlan(
+        FaultSpec("engine.apply", mode="error", match={"engine": first}, times=1)
+    )
+    with obs.capture() as trace, xfft.config(faults=faults):
+        tickets = [svc.loop.submit(SpectrumRequest(frame=f)) for f in frames]
+        svc.loop.drain()
+    for t, f in zip(tickets, frames):
+        np.testing.assert_allclose(
+            t.result().spectrum, np.fft.rfft2(f), rtol=1e-4, atol=1e-4
+        )
+    (failover,) = trace.select("resilience.failover")
+    assert failover["engine"] == first
+    # batches after the bench re-resolved around the benched memo entry
+    assert len(trace.select("serve.lane.replan")) >= 1
+    assert quarantine().table() != []  # breaker still open mid-cooldown
+    # after cooldown the half-open probe restores the original engine
+    fake_clock.now += 31.0
+    svc.serve([SpectrumRequest(frame=frames[0])])
+    assert quarantine().table() == []
+
+
+def test_injected_serve_fault_retries_per_lane_policy(rng):
+    svc = SpectrumService(
+        policy=ServicePolicy(max_retries=1, backoff_s=0.0),
+        batch=BatchPolicy(max_batch=4),
+    )
+    plan = FaultPlan(FaultSpec("serve.batch", mode="error", times=1))
+    with obs.capture() as trace, xfft.config(faults=plan):
+        t = svc.loop.submit(
+            SpectrumRequest(frame=rng.standard_normal((8, 8)).astype(np.float32))
+        )
+        svc.loop.drain()
+    assert t.result().done
+    assert len(trace.select("resilience.retry")) == 1

@@ -1,0 +1,141 @@
+"""Wisdom artifacts: export/warm_start roundtrip + the packaged file.
+
+Roundtrip tests hand-craft MEASURE plans (no sweeps — fast); the
+packaged-artifact test doubles as a schema-staleness guard: if
+``PLAN_SCHEMA_VERSION`` marches past the checked-in ``cpu.json``, its
+``kept`` count drops to zero and this suite says so before a fleet
+silently re-tunes.
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.plan import PlanCache, plan_fft
+from repro.plan.plan import FFTPlan, problem_key
+from repro.serve import SpectrumRequest, SpectrumService, wisdom
+
+
+def _measured_plan(shape=(8, 8), kind="rfft2d", dtype="float32"):
+    key = problem_key(kind, shape, dtype)
+    return FFTPlan(key=key, variant="stockham", mode="measure", measured_us=12.5)
+
+
+def _estimate_plan(shape=(16, 16), kind="fft2d", dtype="complex64"):
+    key = problem_key(kind, shape, dtype)
+    return FFTPlan(key=key, variant="stockham", mode="estimate", est_time_s=1e-5)
+
+
+def test_export_warm_start_roundtrip(tmp_path):
+    src = PlanCache()
+    src.put(_measured_plan())
+    path = wisdom.export(str(tmp_path / "w.json"), src)
+    assert os.path.exists(path)
+
+    fresh = PlanCache()
+    with obs.capture() as trace:
+        report = wisdom.warm_start(path, cache=fresh)
+    assert report.kept == 1 and report.dropped == 0
+    assert len(fresh) == 1
+    (ev,) = trace.select("serve.wisdom.warm_start")
+    assert ev["kept"] == 1 and ev["file_error"] is None
+    # the warmed entry is real wisdom: a lookup hits without planning
+    got = fresh.get(_measured_plan().key)
+    assert got is not None and got.mode == "measure"
+
+
+def test_export_ships_measured_entries_only(tmp_path):
+    src = PlanCache()
+    src.put(_measured_plan())
+    src.put(_estimate_plan())
+    path = wisdom.export(str(tmp_path / "w.json"), src)
+    fresh = PlanCache()
+    assert fresh.load(path).kept == 1  # the ESTIMATE entry stayed home
+
+    # measured_only=False ships everything (a debugging escape hatch)
+    path_all = wisdom.export(str(tmp_path / "all.json"), src, measured_only=False)
+    assert PlanCache().load(path_all).kept == 2
+
+
+def test_export_to_unwritable_path_raises(tmp_path):
+    # a regular file as the parent "directory" is unwritable for anyone,
+    # root included (chmod-based denial doesn't bind root)
+    blocker = tmp_path / "not-a-dir"
+    blocker.write_text("")
+    src = PlanCache()
+    src.put(_measured_plan())
+    with pytest.raises(RuntimeError, match="unwritable"):
+        wisdom.export(str(blocker / "w.json"), src)
+
+
+def test_warm_start_missing_artifact_reports_not_raises(tmp_path):
+    report = wisdom.warm_start(str(tmp_path / "absent.json"), cache=PlanCache())
+    assert report.kept == 0 and report.file_error is not None
+
+
+def test_pretune_produces_measured_wisdom():
+    cache = wisdom.pretune([8], kinds=("rfft2d",), measure_iters=1)
+    assert len(cache) == 1
+    ((_, plan),) = cache.entries()
+    assert plan.key.kind == "rfft2d" and plan.key.shape == (8, 8)
+    # MEASURE may legitimately degrade (trace state, budget) but the
+    # entry must exist and carry the reason if it did
+    assert plan.mode == "measure" or plan.degrade_reason is not None
+
+
+@pytest.mark.skipif(
+    jax.default_backend() != "cpu", reason="packaged artifact is cpu-tuned"
+)
+def test_packaged_cpu_artifact_loads_under_current_schema():
+    """The checked-in wisdom file must stay loadable: kept > 0 guards
+    against a schema bump orphaning the artifact silently."""
+    path = wisdom.artifact_path("cpu")
+    assert path is not None, "src/repro/serve/wisdom_files/cpu.json missing"
+    cache = PlanCache()
+    report = cache.load(path)
+    assert report.kept > 0, f"packaged wisdom is stale: {report}"
+    assert report.file_error is None
+    assert all(p.mode == "measure" for _, p in cache.entries())
+
+
+@pytest.mark.skipif(
+    jax.default_backend() != "cpu", reason="packaged artifact is cpu-tuned"
+)
+def test_warm_started_service_serves_without_measure_sweeps(rng):
+    """The fleet story end to end: warm_start + a measure-mode service =>
+    zero plan.measure spans for an artifact-covered shape."""
+    cache = PlanCache()
+    report = wisdom.warm_start(cache=cache)  # packaged artifact
+    assert report.kept > 0
+    covered = next(
+        p.key.shape for _, p in cache.entries() if p.key.kind == "rfft2d"
+    )
+    svc = SpectrumService(plan_mode="measure", cache=cache)
+    reqs = [
+        SpectrumRequest(frame=rng.standard_normal(covered).astype(np.float32))
+        for _ in range(3)
+    ]
+    with obs.capture() as trace:
+        svc.serve(reqs)
+    assert all(r.done for r in reqs)
+    assert trace.select("plan.measure") == []  # re-tuned nothing
+    outcomes = [e["outcome"] for e in trace.select("plan.resolve")]
+    assert outcomes == ["hit"]
+
+
+def test_pretune_wisdom_roundtrips_through_plan_fft(tmp_path, rng):
+    """export -> warm_start -> plan_fft returns the shipped plan without
+    re-tuning (cache hit, measure mode satisfied)."""
+    src = PlanCache()
+    src.put(_measured_plan(shape=(8, 8)))
+    path = wisdom.export(str(tmp_path / "w.json"), src)
+    fresh = PlanCache()
+    wisdom.warm_start(path, cache=fresh)
+    with obs.capture() as trace:
+        plan = plan_fft("rfft2d", (8, 8), dtype="float32", mode="measure",
+                        cache=fresh)
+    assert plan.mode == "measure" and plan.measured_us == 12.5
+    assert trace.select("plan.measure") == []
