@@ -67,9 +67,14 @@ def apply_engine(name: str, kind: str, x, *, direction: str = "fwd",
     dtypes down to 32 and a double input would be silently truncated
     before the engine ever saw it. ``axis`` (1D kinds only) names the
     transform axis; the executor itself always sees axes-last layout.
-    """
-    from repro import obs  # leaf module; records every registry dispatch
 
+    The ``engine.apply`` dispatch span is NOT emitted here: it lives in
+    :func:`repro.resilience.ladder.run_plan`, which wraps every planned
+    and forced dispatch for *all* engines (builtin chains included) and
+    feeds the calibration ledger observed durations. Emitting here too
+    would double-count registry engines — and MEASURE sweeps, which call
+    executors directly, must stay out of the observed population anyway.
+    """
     spec = get_engine(name)
     fn = spec.op(kind, direction)
 
@@ -83,17 +88,9 @@ def apply_engine(name: str, kind: str, x, *, direction: str = "fwd",
                 return jnp.moveaxis(fn(jnp.moveaxis(arr, ax, -1)), -1, ax)
         return fn(arr)
 
-    with obs.span(
-        "engine.apply",
-        engine=name,
-        backend=spec.backend,
-        kind=kind,
-        direction=direction,
-        x64=spec.requires_x64,
-    ):
-        if spec.requires_x64:
-            from jax.experimental import enable_x64
+    if spec.requires_x64:
+        from jax.experimental import enable_x64
 
-            with enable_x64():
-                return run()
-        return run()
+        with enable_x64():
+            return run()
+    return run()

@@ -150,7 +150,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, overrides=None,
             cp = "model"
     else:
         tp = "model"
-    t0 = time.time()
+    t0 = time.perf_counter()
     step, args, shardings, meta = build_cell(
         arch, shape, mesh, multi_pod, overrides, bf16_params=bf16_params
     )
@@ -158,9 +158,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool, overrides=None,
         dp=dp, dp_sizes=dp_sizes, tp=tp, tp_size=16, cp=cp, cp_size=16,
     ):
         lowered = jax.jit(step, in_shardings=shardings).lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     hlo = compiled.as_text()

@@ -50,9 +50,9 @@ def main():
                 max_new=args.max_new)
         for _ in range(args.requests)
     ]
-    t0 = time.time()
+    t0 = time.perf_counter()
     done = engine.serve_queue(queue, extras=extras or None)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = sum(len(r.out) for r in done)
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks/max(dt,1e-9):.1f} tok/s) arch={cfg.name}")

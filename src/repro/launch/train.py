@@ -62,9 +62,9 @@ def main():
         peak_lr=args.peak_lr,
         compress=args.compress,
     )
-    t0 = time.time()
+    t0 = time.perf_counter()
     losses = loop.run(jax.random.PRNGKey(0), args.steps)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     steps = sorted(losses)
     if steps:
         first = np.mean([losses[s] for s in steps[: max(len(steps)//10, 1)]])

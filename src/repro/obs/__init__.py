@@ -22,11 +22,28 @@ Process-wide counters stay on even without a capture scope (one dict
 increment per event — the ``benchmarks/obs_bench.py`` gate holds the
 instrumented hot path within 3% of uninstrumented); ``xfft.report()``
 renders them next to the live plan cache, FFTW ``export_wisdom``-style.
+
+Always-on telemetry rides the sink hook (:mod:`repro.obs.telemetry`,
+installed at import): a bounded **flight recorder** keeps the most
+recent events with no capture scope open and dumps a JSONL snapshot
+when a failure trigger fires, and a **calibration ledger** joins planner
+predictions against observed engine dispatch times. Latency histograms
+(:mod:`repro.obs.hist`) and exporters — JSONL, Chrome trace, Prometheus
+text (:mod:`repro.obs.export`) — make all of it consumable by standard
+tooling.
 """
 
+from repro.obs import export, hist, telemetry
+from repro.obs.hist import (
+    LatencyHistogram,
+    histogram,
+    histograms,
+    reset_histograms,
+)
 from repro.obs.record import (
     Event,
     Trace,
+    add_sink,
     capture,
     count,
     counters,
@@ -35,21 +52,46 @@ from repro.obs.record import (
     pop_observe,
     profiling,
     push_observe,
+    remove_sink,
     reset_counters,
     span,
 )
+from repro.obs.telemetry import (
+    CalibrationLedger,
+    FlightRecorder,
+    calibration_ledger,
+    flight_recorder,
+    set_flight_recorder,
+)
 
 __all__ = [
+    "CalibrationLedger",
     "Event",
+    "FlightRecorder",
+    "LatencyHistogram",
     "Trace",
+    "add_sink",
+    "calibration_ledger",
     "capture",
     "count",
     "counters",
     "emit",
     "enabled",
+    "export",
+    "flight_recorder",
+    "hist",
+    "histogram",
+    "histograms",
     "pop_observe",
     "profiling",
     "push_observe",
+    "remove_sink",
     "reset_counters",
+    "reset_histograms",
+    "set_flight_recorder",
     "span",
+    "telemetry",
 ]
+
+# Always-on by default: the black box records from the first import.
+telemetry.install_default()

@@ -29,6 +29,14 @@ sees only its own window; every enclosing scope sees the inner events
 too), compose across async tasks, and never observe another thread's
 events. This module imports nothing from the rest of the repo — plan,
 engines, kernels and serve all instrument through it.
+
+Process-wide **sinks** (:func:`add_sink`) sit beside the capture stack:
+a sink receives every event from every thread, scope or no scope — the
+hook the always-on flight recorder and the planner calibration ledger
+(:mod:`repro.obs.telemetry`) hang off. Sinks do not change :func:`emit`'s
+return contract (still ``None`` with no capture scope), and a sink that
+raises is counted (``obs.sink.error``) and skipped, never propagated
+into the instrumented call.
 """
 
 from __future__ import annotations
@@ -43,12 +51,14 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 __all__ = [
     "Event",
     "Trace",
+    "add_sink",
     "capture",
     "count",
     "counters",
     "emit",
     "enabled",
     "profiling",
+    "remove_sink",
     "reset_counters",
     "span",
 ]
@@ -61,6 +71,7 @@ class Event:
     name: str
     t: float                    # time.perf_counter() at emission
     fields: Dict[str, Any]
+    tid: int = 0                # threading.get_ident() of the emitter
 
     def __getitem__(self, field: str) -> Any:
         return self.fields[field]
@@ -130,6 +141,30 @@ _PROFILE: contextvars.ContextVar[bool] = contextvars.ContextVar(
 _COUNTS: Dict[str, int] = {}
 _COUNTS_LOCK = threading.Lock()
 
+# Process-wide sinks: callables fed every Event from every thread. Stored
+# as an immutable tuple so emit() reads one reference with no lock; the
+# lock only serialises (un)installation.
+_SINKS: Tuple[Any, ...] = ()
+_SINKS_LOCK = threading.Lock()
+
+
+def add_sink(sink) -> None:
+    """Install ``sink(event)`` to receive every event process-wide."""
+    global _SINKS
+    with _SINKS_LOCK:
+        if sink not in _SINKS:
+            _SINKS = _SINKS + (sink,)
+
+
+def remove_sink(sink) -> None:
+    """Uninstall a sink previously passed to :func:`add_sink` (no-op if
+    absent). Matches by equality, not identity: ``recorder.record`` is a
+    fresh bound-method object at every attribute access, and bound
+    methods compare equal when receiver and function match."""
+    global _SINKS
+    with _SINKS_LOCK:
+        _SINKS = tuple(s for s in _SINKS if s != sink)
+
 
 def enabled() -> bool:
     """True when at least one capture scope is collecting events here."""
@@ -162,18 +197,31 @@ def reset_counters() -> None:
 def emit(name: str, **fields: Any) -> Optional[Event]:
     """Record one event; returns it when any capture scope received it.
 
-    Always bumps the ``name`` counter. With no active scope that counter
-    increment and one contextvar read are the entire cost — the fields
-    dict the caller built is dropped without ever becoming an Event.
+    Always bumps the ``name`` counter. With no active scope and no
+    installed sink that counter increment, one contextvar read and one
+    global read are the entire cost — the fields dict the caller built
+    is dropped without ever becoming an Event. Sinks receive the event
+    regardless of scope, but the return value reflects only the capture
+    stack (callers test it to know whether anyone in *their* context is
+    listening).
     """
     count(name)
     stack = _STACK.get()
-    if not stack:
+    sinks = _SINKS
+    if not stack and not sinks:
         return None
-    event = Event(name=name, t=time.perf_counter(), fields=fields)
+    event = Event(
+        name=name, t=time.perf_counter(), fields=fields,
+        tid=threading.get_ident(),
+    )
+    for sink in sinks:
+        try:
+            sink(event)
+        except Exception:
+            count("obs.sink.error")
     for trace in stack:
         trace.append(event)
-    return event
+    return event if stack else None
 
 
 def _annotation(name: str):
@@ -204,7 +252,7 @@ def span(name: str, **fields: Any):
     extra: Dict[str, Any] = {}
     stack = _STACK.get()
     prof = _PROFILE.get()
-    if not stack and not prof:
+    if not stack and not prof and not _SINKS:
         # Disabled fast path: one counter bump, no timing, no Event.
         count(name)
         yield extra

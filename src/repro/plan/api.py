@@ -141,6 +141,7 @@ def _resolve_event(
         dtype=key.dtype,
         direction=key.direction,
         precision=key.precision,
+        backend=key.backend,
         mode=mode,
         outcome=outcome,
         variant=plan.variant,

@@ -543,6 +543,19 @@ def _measure_plan_impl(
                 skipped[label] = f"error: {e!r}"
                 continue
             timings[label] = us
+            # Per-candidate event: the calibration ledger's measured
+            # prediction for engines the sweep timed but did NOT choose
+            # (the chosen one also rides plan.resolve's measured_us).
+            obs.emit(
+                "plan.measure.candidate",
+                engine=variant,
+                unroll=unroll,
+                label=label,
+                kind=key.kind,
+                shape=key.shape,
+                precision=key.precision,
+                median_us=us,
+            )
             if timings_out is not None:
                 timings_out[label] = us
             if best is None or us < best[1]:

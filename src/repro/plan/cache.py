@@ -95,6 +95,13 @@ class PlanCache:
         #: Set when a save hit an unwritable path and the cache degraded
         #: to memory-only; holds the path that refused the write.
         self.readonly_path: Optional[str] = None
+        #: Wisdom staleness accounting: the engine each loaded (artifact)
+        #: entry arrived with, and how many consecutive times a live
+        #: MEASURE re-tune disagreed with it. ``repro.serve.wisdom.export``
+        #: drops entries whose losses pass its threshold — stale wisdom
+        #: ages out of the artifact instead of shipping forever.
+        self._artifact_variants: Dict[str, str] = {}
+        self.stale_losses: Dict[str, int] = {}
         if path and autoload and os.path.exists(path):
             self.load(path)
 
@@ -115,7 +122,27 @@ class PlanCache:
         return plan
 
     def put(self, plan: FFTPlan) -> FFTPlan:
-        self._plans[plan.key.cache_key()] = plan
+        ck = plan.key.cache_key()
+        loaded = self._artifact_variants.get(ck)
+        if loaded is not None and plan.mode == "measure":
+            if plan.variant != loaded:
+                # A live MEASURE re-tune beat the warm-started artifact
+                # plan: one staleness loss against the entry.
+                losses = self.stale_losses.get(ck, 0) + 1
+                self.stale_losses[ck] = losses
+                obs.emit(
+                    "serve.wisdom.stale",
+                    key=ck,
+                    artifact_variant=loaded,
+                    measured_variant=plan.variant,
+                    losses=losses,
+                )
+                obs.count("serve.wisdom.stale")
+            elif ck in self.stale_losses:
+                # The artifact's choice was re-confirmed by a live sweep:
+                # losses count CONSECUTIVE disagreements, so reset.
+                del self.stale_losses[ck]
+        self._plans[ck] = plan
         return plan
 
     def clear(self) -> None:
@@ -124,6 +151,8 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.load_report = None
+        self._artifact_variants.clear()
+        self.stale_losses.clear()
 
     def entries(self) -> Tuple[Tuple[str, FFTPlan], ...]:
         """(cache_key, plan) pairs, sorted by key — the introspection
@@ -137,7 +166,11 @@ class PlanCache:
     # ------------------------------ persistence ------------------------------
 
     def save(
-        self, path: Optional[str] = None, *, measured_only: bool = False
+        self,
+        path: Optional[str] = None,
+        *,
+        measured_only: bool = False,
+        exclude: Tuple[str, ...] = (),
     ) -> Optional[str]:
         """Atomically write all plans to ``path`` (default: ``self.path``).
 
@@ -146,6 +179,9 @@ class PlanCache:
         entries cost nothing to recreate and would pin a heuristic guess
         over the receiving process's own estimator, so an exported
         artifact carries only the plans that were actually timed.
+        ``exclude`` drops specific cache keys from the write — the
+        staleness-aging hook ``repro.serve.wisdom.export`` uses to keep
+        repeatedly-outvoted artifact entries out of the next artifact.
 
         The write goes to a temp file in the SAME directory (same
         filesystem, so the rename is atomic), is fsynced, then
@@ -167,6 +203,9 @@ class PlanCache:
         plans = self._plans
         if measured_only:
             plans = {k: p for k, p in plans.items() if p.mode == "measure"}
+        if exclude:
+            dropped = frozenset(exclude)
+            plans = {k: p for k, p in plans.items() if k not in dropped}
         payload = {
             "file_format": _FILE_FORMAT,
             "plan_schema_version": PLAN_SCHEMA_VERSION,
@@ -237,6 +276,7 @@ class PlanCache:
                 mismatch += 1
                 continue  # key/value disagree — do not trust the entry
             self._plans[key] = plan
+            self._artifact_variants[key] = plan.variant
             kept += 1
         report = LoadReport(
             kept=kept,

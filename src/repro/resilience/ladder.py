@@ -52,6 +52,18 @@ def _is_finite(out: Any) -> bool:
         return True
 
 
+def _engine_meta(variant: str):
+    """(backend, requires_x64) for a registered engine, (None, None) for
+    builtin-only names the registry does not know."""
+    from repro.engines import get_engine
+
+    try:
+        spec = get_engine(variant)
+    except Exception:
+        return None, None
+    return spec.backend, spec.requires_x64
+
+
 def _next_rung(key, attempted: Set[str]) -> Optional[str]:
     """Best untried healthy engine for ``key``, or None at the bottom.
 
@@ -83,7 +95,17 @@ def run_plan(plan, runner: Callable[[str], Any]):
     if plan.mode == "forced":
         # Pinned engines are exempt from injection and failover alike:
         # the scope asked for this engine, so this engine is the answer.
-        return runner(plan.variant)
+        # The dispatch span still fires — forced calls belong in the
+        # flight recorder and the calibration ledger like any other.
+        backend, x64 = _engine_meta(plan.variant)
+        with obs.span(
+            "engine.apply", engine=plan.variant, backend=backend,
+            kind=plan.key.kind, direction=plan.key.direction,
+            shape=plan.key.shape, precision=plan.key.precision, x64=x64,
+        ) as sp:
+            out = runner(plan.variant)
+            sp["ok"] = True
+        return out
     key = plan.key
     breaker = quarantine()
     variant = plan.variant
@@ -94,14 +116,24 @@ def run_plan(plan, runner: Callable[[str], Any]):
         reason = "error"
         err: Optional[BaseException] = None
         try:
+            # Injected pre-dispatch failures (error/latency/vmem) fire
+            # OUTSIDE the span: a fault that prevented the engine from
+            # running must not pollute its observed-duration population.
             faults.maybe_fail(
                 "engine.apply", engine=variant, kind=key.kind,
                 direction=key.direction,
             )
-            out = faults.maybe_corrupt(
-                "engine.apply", runner(variant), engine=variant,
-                kind=key.kind, direction=key.direction,
-            )
+            backend, x64 = _engine_meta(variant)
+            with obs.span(
+                "engine.apply", engine=variant, backend=backend,
+                kind=key.kind, direction=key.direction, shape=key.shape,
+                precision=key.precision, x64=x64,
+            ) as sp:
+                out = faults.maybe_corrupt(
+                    "engine.apply", runner(variant), engine=variant,
+                    kind=key.kind, direction=key.direction,
+                )
+                sp["ok"] = True
             if not check_health or _is_finite(out):
                 breaker.record_success(variant, key)
                 return out

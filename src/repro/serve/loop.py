@@ -47,6 +47,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro import obs
+from repro.obs.hist import LatencyHistogram, histogram
 from repro.resilience.policies import ServicePolicy, admit
 from repro.serve.queue import AdmissionQueue, BatchPolicy, LaneKey, Ticket
 
@@ -178,6 +179,13 @@ class ServeLoop:
 
     # ------------------------------ dispatch ------------------------------
 
+    def _lane_histogram(self, lane: LaneKey) -> LatencyHistogram:
+        """The process-wide admission->completion latency histogram of one
+        lane (``serve.lane.<service>.<label>`` in the registry): bounded,
+        mergeable, and readable by ``xfft.report()`` and the Prometheus
+        exporter without touching the loop."""
+        return histogram(f"serve.lane.{self.service}.{lane.label()}")
+
     def tick(self, *, drain: bool = False, raise_errors: bool = False) -> int:
         """Dispatch at most one ready lane batch; returns tickets served.
 
@@ -193,6 +201,7 @@ class ServeLoop:
             return 0
         lane, tickets = taken
         now = self.clock()
+        hist = self._lane_histogram(lane)
         obs.emit(
             "serve.loop.tick",
             service=self.service,
@@ -200,6 +209,12 @@ class ServeLoop:
             batch=len(tickets),
             depth=self.queue.depth(),
             waited_s=now - tickets[0].submitted_at,
+            # the lane's latency-tail gauges as of the PREVIOUS batches:
+            # a monitoring scrape of the tick stream sees the live tail
+            # without holding a capture scope open
+            lane_n=hist.count,
+            lane_p50_us=hist.percentile(50) if hist.count else None,
+            lane_p99_us=hist.percentile(99) if hist.count else None,
         )
         try:
             self.execute(lane, [t.request for t in tickets])
@@ -216,8 +231,12 @@ class ServeLoop:
             if raise_errors:
                 raise
             return len(tickets)
+        done_at = self.clock()
         for t in tickets:
             t.mark_done()
+            # admission -> completion, on the same injectable clock the
+            # ticket was stamped with
+            hist.record((done_at - t.submitted_at) * 1e6)
         return len(tickets)
 
     def drain(self, *, raise_errors: bool = False) -> int:

@@ -79,6 +79,7 @@ def export(
     cache: Optional[PlanCache] = None,
     *,
     measured_only: bool = True,
+    stale_loss_threshold: Optional[int] = 3,
 ) -> str:
     """Write ``cache`` (default: the active scope's cache) to ``path``.
 
@@ -87,9 +88,23 @@ def export(
     ``RuntimeError`` when the path is unwritable (an *export* that lands
     nowhere is an error; the serve path's degrade-to-memory behaviour
     lives in :meth:`PlanCache.save` and still applies there).
+
+    **Staleness aging**: warm-started artifact entries that lost to a
+    live MEASURE re-tune ``stale_loss_threshold`` or more consecutive
+    times (the ``serve.wisdom.stale`` accounting on
+    :attr:`PlanCache.stale_losses`) are dropped from the written artifact
+    — wisdom the fleet keeps outvoting stops shipping. ``None`` disables
+    aging (export everything regardless of losses).
     """
     cache = cache if cache is not None else _active_cache()
-    written = cache.save(path, measured_only=measured_only)
+    stale = (
+        tuple(
+            k for k, losses in cache.stale_losses.items()
+            if losses >= stale_loss_threshold
+        )
+        if stale_loss_threshold is not None else ()
+    )
+    written = cache.save(path, measured_only=measured_only, exclude=stale)
     if written is None:
         raise RuntimeError(
             f"wisdom export to {path!r} failed: path is unwritable "
@@ -100,6 +115,7 @@ def export(
         path=written,
         entries=len(cache),
         measured_only=measured_only,
+        dropped_stale=len(stale),
     )
     return written
 

@@ -92,6 +92,14 @@ class XFFTConfig:
                 degradation ladder treat a non-finite transform output as
                 an engine failure (retry one rung down); ``"off"`` (the
                 default) trusts outputs.
+
+    The ``flight_recorder=`` argument to :func:`config` is deliberately
+    *not* a field here: the flight recorder is process-global state (the
+    always-on black box of :mod:`repro.obs.telemetry`), not part of the
+    hashable planning configuration — plan memoization keys on this
+    dataclass and must not vary with telemetry plumbing. ``config`` swaps
+    the recorder and restores the previous one on scope exit, exactly
+    like the contextvars fields.
     """
 
     variant: Optional[str] = None
@@ -157,8 +165,29 @@ class config:
         observe: Any = None,
         faults: Any = None,
         check_health: Optional[str] = None,
+        flight_recorder: Any = None,
     ):
         prev = _ACTIVE.get()
+        if flight_recorder is not None:
+            from repro.obs import telemetry as _telemetry
+
+            if isinstance(flight_recorder, bool):
+                recorder = (
+                    _telemetry.FlightRecorder() if flight_recorder else None
+                )
+            elif isinstance(flight_recorder, int):
+                recorder = _telemetry.FlightRecorder(capacity=flight_recorder)
+            elif isinstance(flight_recorder, _telemetry.FlightRecorder):
+                recorder = flight_recorder
+            else:
+                raise ValueError(
+                    f"flight_recorder must be a repro.obs.FlightRecorder, "
+                    f"True (fresh default recorder), False (off), an int "
+                    f"capacity, or None (inherit); got {flight_recorder!r}"
+                )
+            self._flight_prev = (True, _telemetry.set_flight_recorder(recorder))
+        else:
+            self._flight_prev = None
         if observe is not None and not isinstance(observe, (bool, obs.Trace)):
             raise ValueError(
                 f"observe must be a repro.obs.Trace, True (profiler "
@@ -256,6 +285,11 @@ class config:
 
     def restore(self) -> None:
         """Undo this call's overrides (automatic when used as a context)."""
+        if self._flight_prev is not None:
+            from repro.obs import telemetry as _telemetry
+
+            _telemetry.set_flight_recorder(self._flight_prev[1])
+            self._flight_prev = None
         if self._faults_token is not None:
             pop_faults(self._faults_token)
             self._faults_token = None

@@ -93,6 +93,21 @@ def report_data(cache=None) -> dict:
             "quarantine": qrows,
             "quarantine_by_service": by_service,
         },
+        # Always-on telemetry (repro.obs.telemetry): flight-recorder
+        # retention + dump accounting, the planner calibration ledger's
+        # mispricing table (observed engine.apply time vs the planner's
+        # prediction), and every registered latency histogram (serve
+        # lanes + engines).
+        "telemetry": {
+            "flight_recorder": (
+                None if obs.flight_recorder() is None
+                else obs.flight_recorder().stats()
+            ),
+            "calibration": obs.calibration_ledger().table(),
+            "histograms": {
+                name: h.to_dict() for name, h in obs.histograms().items()
+            },
+        },
         "counters": obs.counters(),
     }
 
@@ -160,6 +175,43 @@ def report(cache=None) -> str:
                     line += f" cooldown={q['cooldown_remaining_s']:.1f}s"
                 line += f"  {q['key']}"
                 lines.append(line)
+    tel = d["telemetry"]
+    fr = tel["flight_recorder"]
+    if fr is None:
+        lines.append("flight recorder: off")
+    else:
+        lines.append(
+            f"flight recorder: retained={fr['retained']}/{fr['capacity']}"
+            f"  recorded={fr['recorded_total']}  dumps={len(fr['dumps'])}"
+            + (f" (+{fr['dropped_dumps']} dropped)" if fr["dropped_dumps"] else "")
+        )
+        for dump in fr["dumps"]:
+            lines.append(
+                f"  dump[{dump['trigger']}] {dump['events']} events -> "
+                f"{dump['path']}"
+            )
+    if tel["histograms"]:
+        lines.append("latency histograms (us):")
+        for name, h in tel["histograms"].items():
+            lines.append(
+                f"  {name:<40} n={h['count']:<7} p50={h['p50_us']:<9} "
+                f"p95={h['p95_us']:<9} p99={h['p99_us']}"
+            )
+    if tel["calibration"]:
+        lines.append("planner calibration (observed vs predicted, worst first):")
+        for r in tel["calibration"]:
+            shape = "x".join(str(s) for s in r["shape"])
+            problem = f"{r['engine']} {r['kind']} {shape} {r['precision']}"
+            ratio = f"{r['ratio']:.2f}x" if r["ratio"] is not None else "-"
+            observed = (
+                f"{r['observed_p50_us']}us" if r["observed_p50_us"] is not None
+                else "-"
+            )
+            lines.append(
+                f"  {problem:<44} predicted={r['predicted_us']}us"
+                f"[{r['predicted_source']}] observed_p50={observed} "
+                f"ratio={ratio} n={r['observed_n']}"
+            )
     counters = d["counters"]
     if counters:
         lines.append("counters:")

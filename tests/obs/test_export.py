@@ -1,0 +1,102 @@
+"""Exporters: JSONL round-trip, Chrome trace structure, Prometheus text."""
+
+import json
+
+from repro.obs.export import (
+    chrome_trace,
+    event_dict,
+    prometheus_text,
+    write_chrome_trace,
+    write_jsonl,
+    write_prometheus,
+)
+from repro.obs.hist import LatencyHistogram
+from repro.obs.record import Event
+
+
+def _ev(name, t=1.0, tid=11, **fields):
+    return Event(name=name, t=t, fields=fields, tid=tid)
+
+
+def test_jsonl_round_trip(tmp_path):
+    events = [
+        _ev("plan.resolve", t=1.0, outcome="hit", shape=(64, 64)),
+        _ev("engine.apply", t=2.0, duration_us=120.5, ok=True),
+    ]
+    path = write_jsonl(events, str(tmp_path / "events.jsonl"))
+    lines = [json.loads(line) for line in open(path)]
+    assert [ln["name"] for ln in lines] == ["plan.resolve", "engine.apply"]
+    assert lines[0]["fields"]["shape"] == [64, 64]
+    assert lines[1]["fields"]["duration_us"] == 120.5
+    assert all(ln["tid"] == 11 for ln in lines)
+
+
+def test_event_dict_survives_exotic_field_values():
+    class Weird:
+        def __repr__(self):
+            return "<weird>"
+
+    d = event_dict(_ev("x", obj=Weird(), nested={"a": (1, Weird())}, none=None))
+    json.dumps(d)  # must be serialisable no matter what rode the event
+    assert d["fields"]["obj"] == "<weird>"
+    assert d["fields"]["nested"]["a"] == [1, "<weird>"]
+    assert d["fields"]["none"] is None
+
+
+def test_chrome_trace_spans_and_instants():
+    events = [
+        _ev("engine.apply", t=2.0, tid=5, duration_us=1000.0, engine="e"),
+        _ev("plan.resolve", t=1.0, tid=5, outcome="hit"),
+    ]
+    doc = chrome_trace(events, thread_names={5: "serve-loop[spectrum]"})
+    spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    instants = [e for e in doc["traceEvents"] if e.get("ph") == "i"]
+    meta = [e for e in doc["traceEvents"] if e.get("ph") == "M"]
+    (span,) = spans
+    # emission happens at span EXIT: ts is start = t*1e6 - duration
+    assert span["ts"] == 2.0 * 1e6 - 1000.0
+    assert span["dur"] == 1000.0 and span["tid"] == 5
+    (inst,) = instants
+    assert inst["ts"] == 1.0 * 1e6
+    (m,) = meta
+    assert m["name"] == "thread_name"
+    assert m["args"]["name"] == "serve-loop[spectrum]"
+
+
+def test_chrome_trace_labels_unknown_threads(tmp_path):
+    doc = chrome_trace([_ev("a", tid=999)])
+    (m,) = [e for e in doc["traceEvents"] if e.get("ph") == "M"]
+    assert m["args"]["name"] == "thread-999"
+    path = write_chrome_trace([_ev("a", tid=999)], str(tmp_path / "t.json"))
+    loaded = json.load(open(path))
+    assert loaded["traceEvents"]
+
+
+def test_prometheus_counters_gauges_and_quantiles(tmp_path):
+    h = LatencyHistogram()
+    for v in (10.0, 100.0, 1000.0):
+        h.record(v)
+    text = prometheus_text(
+        counters={"plan.resolve.hit": 3},
+        gauges={"flight_recorder_retained": 42},
+        histograms={"serve.lane.spectrum.x": h},
+    )
+    assert '# TYPE repro_events_total counter' in text
+    assert 'repro_events_total{event="plan.resolve.hit"} 3' in text
+    assert 'repro_gauge{name="flight_recorder_retained"} 42.0' in text
+    assert 'quantile="0.50"' in text and 'quantile="0.99"' in text
+    assert 'repro_latency_us_count{hist="serve.lane.spectrum.x"} 3' in text
+    assert text.endswith("\n")
+    path = write_prometheus(
+        str(tmp_path / "metrics.prom"), counters={"a": 1}
+    )
+    assert 'repro_events_total{event="a"} 1' in open(path).read()
+
+
+def test_prometheus_escapes_label_values():
+    text = prometheus_text(counters={'weird"name\\x': 1})
+    assert 'event="weird\\"name\\\\x"' in text
+
+
+def test_prometheus_empty_is_empty():
+    assert prometheus_text() == ""

@@ -1,0 +1,146 @@
+"""Latency histograms: geometry, percentile accuracy, merging, registry."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs.hist import (
+    LatencyHistogram,
+    histogram,
+    histograms,
+    reset_histograms,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    reset_histograms()
+    yield
+    reset_histograms()
+
+
+def test_bucket_index_monotone_and_bounded():
+    h = LatencyHistogram()
+    values = [0.0, 0.5, 1.0, 1.5, 10.0, 1e3, 1e6, 1e9, 1e15]
+    indices = [h.bucket_index(v) for v in values]
+    assert indices == sorted(indices)
+    assert indices[0] == 0
+    assert all(0 <= i < h.buckets for i in indices)
+    # the far tail lands in the catch-all last cell, never out of range
+    assert h.bucket_index(1e15) == h.buckets - 1
+
+
+def test_bucket_bound_contains_its_values():
+    h = LatencyHistogram()
+    for v in [1.7, 23.0, 456.0, 9876.0]:
+        i = h.bucket_index(v)
+        assert v <= h.bucket_bound(i)
+        if i > 0:
+            assert v > h.bucket_bound(i - 1)
+
+
+def test_percentile_within_bucket_resolution_of_raw():
+    rng = np.random.default_rng(7)
+    values = rng.lognormal(mean=5.0, sigma=1.2, size=4000)
+    h = LatencyHistogram()
+    for v in values:
+        h.record(float(v))
+    for p in (50, 95, 99):
+        raw = float(np.percentile(values, p))
+        est = h.percentile(p)
+        # exact within bucket resolution: same cell or the neighbour
+        # (numpy interpolates between the straddling order statistics)
+        assert abs(h.bucket_index(est) - h.bucket_index(raw)) <= 1
+        # ...which bounds the relative error by one growth factor
+        assert est / raw <= h.growth * 1.0001
+        assert raw / est <= h.growth * 1.0001
+
+
+def test_empty_and_single_sample():
+    h = LatencyHistogram()
+    assert h.percentile(99) == 0.0
+    assert h.count == 0 and h.mean_us() == 0.0
+    h.record(42.0)
+    assert h.count == 1
+    assert h.bucket_index(h.percentile(50)) == h.bucket_index(42.0)
+
+
+def test_merge_equals_recording_everything():
+    rng = np.random.default_rng(3)
+    a_vals = rng.lognormal(4.0, 1.0, size=500)
+    b_vals = rng.lognormal(6.0, 0.5, size=700)
+    a, b, both = LatencyHistogram(), LatencyHistogram(), LatencyHistogram()
+    for v in a_vals:
+        a.record(float(v))
+        both.record(float(v))
+    for v in b_vals:
+        b.record(float(v))
+        both.record(float(v))
+    a.merge(b)
+    assert a.count == both.count == 1200
+    assert a.cells() == both.cells()
+    for p in (50, 95, 99):
+        assert a.percentile(p) == both.percentile(p)
+    assert a.max_us == both.max_us
+
+
+def test_merge_rejects_different_geometry():
+    with pytest.raises(ValueError):
+        LatencyHistogram(min_us=1.0).merge(LatencyHistogram(min_us=2.0))
+
+
+def test_bad_geometry_rejected():
+    with pytest.raises(ValueError):
+        LatencyHistogram(min_us=0.0)
+    with pytest.raises(ValueError):
+        LatencyHistogram(growth=1.0)
+    with pytest.raises(ValueError):
+        LatencyHistogram(buckets=1)
+
+
+def test_memory_is_bounded_by_geometry():
+    h = LatencyHistogram(buckets=32)
+    for i in range(10_000):
+        h.record(float(i % 997))
+    assert len(h.cells()) == 32
+    assert h.count == 10_000
+
+
+def test_concurrent_recording_loses_nothing():
+    h = LatencyHistogram()
+    per_thread, n_threads = 2000, 8
+
+    def work():
+        for i in range(per_thread):
+            h.record(float(1 + i % 100))
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.count == per_thread * n_threads
+    assert sum(h.cells()) == per_thread * n_threads
+
+
+def test_registry_shares_instances_and_resets():
+    a = histogram("serve.lane.test.x")
+    b = histogram("serve.lane.test.x")
+    assert a is b
+    a.record(10.0)
+    assert histograms()["serve.lane.test.x"].count == 1
+    assert histograms(prefix="serve.lane.") == {"serve.lane.test.x": a}
+    assert histograms(prefix="engine.") == {}
+    reset_histograms()
+    assert histogram("serve.lane.test.x") is not a
+
+
+def test_to_dict_summary_fields():
+    h = LatencyHistogram()
+    for v in (10.0, 20.0, 30.0):
+        h.record(v)
+    d = h.to_dict()
+    assert d["count"] == 3
+    assert d["p50_us"] >= 10.0 and d["p99_us"] >= d["p50_us"]
+    assert d["max_us"] == 30.0

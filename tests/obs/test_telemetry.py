@@ -1,0 +1,279 @@
+"""Flight recorder + calibration ledger: always-on black-box behaviour."""
+
+import json
+import threading
+import time
+
+import pytest
+
+import repro.xfft as xfft
+from repro import obs
+from repro.obs import telemetry
+from repro.obs.telemetry import CalibrationLedger, FlightRecorder
+
+
+@pytest.fixture
+def recorder(tmp_path):
+    """A small fresh recorder installed for the test, previous restored."""
+    rec = FlightRecorder(capacity=64, dump_dir=str(tmp_path / "flight"))
+    prev = telemetry.set_flight_recorder(rec)
+    yield rec
+    telemetry.set_flight_recorder(prev)
+
+
+def test_default_recorder_installed_and_always_on():
+    rec = obs.flight_recorder()
+    assert rec is not None
+    before = rec.stats()["recorded_total"]
+    # no capture scope open anywhere — the ring still records
+    assert obs.emit("telemetry.unit.noscope", x=1) is None
+    assert rec.stats()["recorded_total"] == before + 1
+    assert any(e.name == "telemetry.unit.noscope" for e in rec.events())
+
+
+def test_ring_is_bounded_and_keeps_most_recent(recorder):
+    for i in range(200):
+        obs.emit("telemetry.unit.flood", i=i)
+    events = recorder.events()
+    assert len(events) == 64
+    assert [e["i"] for e in events] == list(range(136, 200))
+    assert recorder.stats()["recorded_total"] == 200
+
+
+def test_trigger_dumps_jsonl_with_trigger_event_last(recorder):
+    for i in range(10):
+        obs.emit("telemetry.unit.lead", i=i)
+    obs.emit("serve.lane.error", service="spectrum", lane="x", error="boom")
+    stats = recorder.stats()
+    assert len(stats["dumps"]) == 1
+    dump = stats["dumps"][0]
+    assert dump["trigger"] == "serve.lane.error"
+    lines = [json.loads(line) for line in open(dump["path"])]
+    assert lines[-1]["name"] == "serve.lane.error"
+    assert lines[-1]["fields"]["error"] == "boom"
+    assert [ln["name"] for ln in lines[:-1]][-10:] == ["telemetry.unit.lead"] * 10
+    # every line carries the emitting thread id
+    assert all(isinstance(ln["tid"], int) for ln in lines)
+
+
+def test_breaker_trigger_only_fires_on_open(recorder):
+    obs.emit("resilience.breaker", state="half_open", engine="e")
+    obs.emit("resilience.breaker", state="closed", engine="e")
+    assert recorder.stats()["dumps"] == []
+    obs.emit("resilience.breaker", state="open", engine="e")
+    assert len(recorder.stats()["dumps"]) == 1
+
+
+def test_shed_and_failover_triggers_fire(recorder):
+    obs.emit("serve.shed", service="s", depth=9)
+    obs.emit("resilience.failover", engine="e", next="f")
+    triggers = [d["trigger"] for d in recorder.stats()["dumps"]]
+    assert triggers == ["serve.shed", "resilience.failover"]
+
+
+def test_max_dumps_caps_files_and_counts_drops(tmp_path):
+    rec = FlightRecorder(capacity=16, dump_dir=str(tmp_path), max_dumps=2)
+    prev = telemetry.set_flight_recorder(rec)
+    try:
+        for _ in range(5):
+            obs.emit("serve.shed", service="s")
+    finally:
+        telemetry.set_flight_recorder(prev)
+    stats = rec.stats()
+    assert len(stats["dumps"]) == 2
+    assert stats["dropped_dumps"] == 3
+
+
+def test_manual_dump_to_explicit_path(recorder, tmp_path):
+    obs.emit("telemetry.unit.manual", a=1)
+    path = recorder.dump(str(tmp_path / "manual.jsonl"))
+    lines = [json.loads(line) for line in open(path)]
+    assert lines[-1]["name"] == "telemetry.unit.manual"
+    assert recorder.stats()["dumps"][-1]["trigger"] == "manual"
+
+
+def test_emit_return_contract_unchanged_with_recorder_on(recorder):
+    # sinks must not make scope-less emit() look observed
+    assert obs.emit("telemetry.unit.ret") is None
+    with obs.capture():
+        assert obs.emit("telemetry.unit.ret") is not None
+
+
+def test_config_flight_recorder_scoping(tmp_path):
+    outer = obs.flight_recorder()
+    mine = FlightRecorder(capacity=8, dump_dir=str(tmp_path))
+    with xfft.config(flight_recorder=mine):
+        assert obs.flight_recorder() is mine
+        obs.emit("telemetry.unit.scoped")
+        assert any(e.name == "telemetry.unit.scoped" for e in mine.events())
+        with xfft.config(flight_recorder=False):
+            assert obs.flight_recorder() is None
+            obs.emit("telemetry.unit.off")
+        assert obs.flight_recorder() is mine
+        assert not any(e.name == "telemetry.unit.off" for e in mine.events())
+    assert obs.flight_recorder() is outer
+
+
+def test_config_flight_recorder_capacity_and_validation():
+    with xfft.config(flight_recorder=32):
+        assert obs.flight_recorder().capacity == 32
+    with xfft.config(flight_recorder=True):
+        assert obs.flight_recorder().capacity == 4096
+    with pytest.raises(ValueError):
+        xfft.config(flight_recorder="yes")
+
+
+def test_recorder_records_across_threads_capture_stays_isolated(recorder):
+    done = threading.Event()
+
+    def worker():
+        obs.emit("telemetry.unit.worker", who="bg")
+        done.set()
+
+    with obs.capture() as trace:
+        obs.emit("telemetry.unit.caller", who="main")
+        threading.Thread(target=worker).start()
+        assert done.wait(5.0)
+    names = [e.name for e in trace]
+    assert "telemetry.unit.caller" in names
+    assert "telemetry.unit.worker" not in names  # thread isolation holds
+    ring = [e.name for e in recorder.events()]
+    assert "telemetry.unit.worker" in ring and "telemetry.unit.caller" in ring
+    tids = {e.tid for e in recorder.events()}
+    assert len(tids) >= 2
+    assert set(recorder.thread_names()) >= tids
+
+
+# ------------------------------ ledger ------------------------------
+
+
+def _resolve_event(**over):
+    fields = dict(
+        variant="eng_a", kind="fft2d", shape=(64, 64), precision="single",
+        est_time_s=100e-6, measured_us=None, outcome="miss",
+    )
+    fields.update(over)
+    obs.emit("plan.resolve", **fields)
+
+
+def test_ledger_joins_estimate_against_observed():
+    ledger = obs.calibration_ledger()
+    ledger.reset()
+    _resolve_event()
+    for _ in range(4):
+        obs.emit(
+            "engine.apply", engine="eng_a", kind="fft2d", shape=(64, 64),
+            precision="single", ok=True, duration_us=200.0,
+        )
+    (row,) = [r for r in ledger.table() if r["engine"] == "eng_a"]
+    assert row["predicted_us"] == 100.0
+    assert row["predicted_source"] == "estimate"
+    assert row["observed_n"] == 4
+    # both sides are independently rounded for display, so compare loosely
+    assert row["ratio"] == pytest.approx(
+        row["observed_p50_us"] / 100.0, rel=1e-2
+    )
+    assert row["ratio"] > 1.0  # planner optimistic here, by construction
+
+
+def test_ledger_prefers_measured_prediction():
+    ledger = obs.calibration_ledger()
+    ledger.reset()
+    _resolve_event(measured_us=150.0, outcome="measured")
+    obs.emit(
+        "engine.apply", engine="eng_a", kind="fft2d", shape=(64, 64),
+        precision="single", ok=True, duration_us=150.0,
+    )
+    (row,) = ledger.table()
+    assert row["predicted_us"] == 150.0
+    assert row["predicted_source"] == "measure"
+
+
+def test_ledger_candidate_events_cover_losing_engines():
+    ledger = obs.calibration_ledger()
+    ledger.reset()
+    obs.emit(
+        "plan.measure.candidate", engine="eng_b", unroll=1, label="eng_b",
+        kind="rfft2d", shape=(128, 128), precision="single", median_us=300.0,
+    )
+    (row,) = ledger.table()
+    assert row["engine"] == "eng_b" and row["predicted_us"] == 300.0
+    assert row["observed_n"] == 0 and row["ratio"] is None
+
+
+def test_ledger_skips_failed_dispatches():
+    ledger = obs.calibration_ledger()
+    ledger.reset()
+    _resolve_event()
+    obs.emit(  # no ok=True: the engine raised mid-span
+        "engine.apply", engine="eng_a", kind="fft2d", shape=(64, 64),
+        precision="single", duration_us=5.0,
+    )
+    (row,) = ledger.table()
+    assert row["observed_n"] == 0
+
+
+def test_ledger_feeds_per_engine_histograms():
+    obs.reset_histograms()
+    ledger = obs.calibration_ledger()
+    ledger.reset()
+    obs.emit(
+        "engine.apply", engine="eng_c", kind="fft2d", shape=(8, 8),
+        precision="single", ok=True, duration_us=77.0,
+    )
+    assert obs.histograms()["engine.eng_c"].count == 1
+    obs.reset_histograms()
+
+
+def test_ledger_end_to_end_through_transforms(rng):
+    import numpy as np
+
+    ledger = obs.calibration_ledger()
+    ledger.reset()
+    x = (rng.standard_normal((16, 16))
+         + 1j * rng.standard_normal((16, 16))).astype(np.complex64)
+    for _ in range(3):
+        np.asarray(xfft.fft2(x))
+    rows = [r for r in ledger.table() if r["kind"] == "fft2d"
+            and r["observed_n"] > 0]
+    assert rows, "real transform dispatch must land observed samples"
+    assert all(r["ratio"] is not None for r in rows)
+
+
+def test_report_renders_telemetry_sections(rng):
+    import numpy as np
+
+    x = (rng.standard_normal((16, 16))
+         + 1j * rng.standard_normal((16, 16))).astype(np.complex64)
+    np.asarray(xfft.fft2(x))
+    data = xfft.report_data()
+    assert data["telemetry"]["flight_recorder"]["capacity"] >= 1
+    assert isinstance(data["telemetry"]["calibration"], list)
+    text = xfft.report()
+    assert "flight recorder:" in text
+    assert "planner calibration" in text
+
+
+def test_sink_errors_never_break_emit():
+    calls = []
+
+    def bad_sink(event):
+        calls.append(event.name)
+        raise RuntimeError("sink exploded")
+
+    obs.add_sink(bad_sink)
+    try:
+        before = obs.counters().get("obs.sink.error", 0)
+        assert obs.emit("telemetry.unit.badsink") is None  # no raise
+        assert obs.counters()["obs.sink.error"] == before + 1
+        assert calls == ["telemetry.unit.badsink"]
+    finally:
+        obs.remove_sink(bad_sink)
+
+
+def test_span_fires_sinks_without_capture_scope(recorder):
+    with obs.span("telemetry.unit.region", tag=1):
+        time.sleep(0.001)
+    (ev,) = [e for e in recorder.events()
+             if e.name == "telemetry.unit.region"]
+    assert ev["duration_us"] > 0 and ev["tag"] == 1

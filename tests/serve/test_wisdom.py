@@ -126,6 +126,76 @@ def test_warm_started_service_serves_without_measure_sweeps(rng):
     assert outcomes == ["hit"]
 
 
+def _warmed_cache(tmp_path, variant="stockham"):
+    """A fresh cache warm-started from an artifact holding one MEASURE
+    entry tuned to ``variant`` — the staleness-aging test substrate."""
+    src = PlanCache()
+    key = problem_key("rfft2d", (8, 8), "float32")
+    src.put(FFTPlan(key=key, variant=variant, mode="measure", measured_us=12.5))
+    path = wisdom.export(str(tmp_path / "seed.json"), src)
+    fresh = PlanCache()
+    wisdom.warm_start(path, cache=fresh)
+    return fresh, key
+
+
+def test_stale_losses_count_consecutive_retune_disagreements(tmp_path):
+    cache, key = _warmed_cache(tmp_path, variant="stockham")
+    ck = key.cache_key()
+    retuned = FFTPlan(key=key, variant="radix4", mode="measure",
+                      measured_us=9.0)
+    with obs.capture() as trace:
+        cache.put(retuned)
+        cache.put(retuned)
+    assert cache.stale_losses[ck] == 2
+    losses = [e["losses"] for e in trace.select("serve.wisdom.stale")]
+    assert losses == [1, 2]
+    ev = trace.select("serve.wisdom.stale")[0]
+    assert ev["artifact_variant"] == "stockham"
+    assert ev["measured_variant"] == "radix4"
+
+
+def test_stale_losses_reset_when_artifact_choice_reconfirmed(tmp_path):
+    cache, key = _warmed_cache(tmp_path, variant="stockham")
+    ck = key.cache_key()
+    cache.put(FFTPlan(key=key, variant="radix4", mode="measure",
+                      measured_us=9.0))
+    assert cache.stale_losses[ck] == 1
+    # a later sweep agrees with the artifact again: consecutive count resets
+    cache.put(FFTPlan(key=key, variant="stockham", mode="measure",
+                      measured_us=11.0))
+    assert ck not in cache.stale_losses
+
+
+def test_export_drops_entries_past_stale_loss_threshold(tmp_path):
+    cache, key = _warmed_cache(tmp_path, variant="stockham")
+    retuned = FFTPlan(key=key, variant="radix4", mode="measure",
+                      measured_us=9.0)
+    cache.put(retuned)
+    cache.put(retuned)
+    with obs.capture() as trace:
+        aged = wisdom.export(str(tmp_path / "aged.json"), cache,
+                             stale_loss_threshold=2)
+    assert PlanCache().load(aged).kept == 0  # outvoted wisdom aged out
+    (ev,) = trace.select("serve.wisdom.export")
+    assert ev["dropped_stale"] == 1
+
+    # below threshold (or aging disabled) the entry still ships
+    kept = wisdom.export(str(tmp_path / "kept.json"), cache,
+                         stale_loss_threshold=3)
+    assert PlanCache().load(kept).kept == 1
+    kept_all = wisdom.export(str(tmp_path / "all.json"), cache,
+                             stale_loss_threshold=None)
+    assert PlanCache().load(kept_all).kept == 1
+
+
+def test_estimate_retunes_do_not_count_stale_losses(tmp_path):
+    cache, key = _warmed_cache(tmp_path, variant="stockham")
+    # ESTIMATE plans are heuristic guesses, not evidence against wisdom
+    cache.put(FFTPlan(key=key, variant="radix4", mode="estimate",
+                      est_time_s=1e-5))
+    assert cache.stale_losses == {}
+
+
 def test_pretune_wisdom_roundtrips_through_plan_fft(tmp_path, rng):
     """export -> warm_start -> plan_fft returns the shipped plan without
     re-tuning (cache hit, measure mode satisfied)."""
