@@ -1,0 +1,176 @@
+"""MRI reconstruction benchmark: CG-SENSE latency + the PR-10 gates.
+
+Three panels in one JSON report:
+
+  * recon      — CG-SENSE wall time per iteration (the solve is a host
+                 loop by design: each iteration resolves through
+                 ``repro.plan`` and emits its residual), plus the NRMSE
+                 of CG vs zero-filled at R=2 and R=4 — CG must beat the
+                 baseline by the gated margin at both accelerations;
+  * moco       — the motion-compensated model: NRMSE of motion-blind
+                 CG-SENSE vs Batchelor moco CG on two-shot corrupted
+                 data (the gate: modelling motion must help);
+  * plan_cache — under ``xfft.config(mode="measure")`` the FIRST recon
+                 of a problem key tunes (MEASURE sweeps run); the second
+                 recon of the same key must perform ZERO sweeps and
+                 resolve every transform as a cache hit — the event
+                 stream is the proof.
+
+  PYTHONPATH=src python benchmarks/mri_bench.py --size 64
+  PYTHONPATH=src python -m benchmarks.run mri
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+import repro.xfft as xfft
+from repro import mri, obs
+
+try:  # python -m benchmarks.mri_bench (repo root on sys.path)
+    from benchmarks.common import emit
+except ImportError:  # python benchmarks/mri_bench.py (script dir on path)
+    from common import emit
+
+COILS = 4
+ITERS = 10
+
+
+def _median_us(fn, warmup: int = 1, repeats: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _problem(n: int, accel: int, calib: int = 16):
+    x = np.asarray(mri.shepp_logan(n))
+    smaps = np.asarray(mri.birdcage_maps(COILS, n))
+    mask = np.asarray(mri.uniform_mask((n, n), accel, calib=calib))
+    k = np.asarray(mri.sense_forward(x, smaps, mask))
+    return x, smaps, mask, k
+
+
+def bench_recon(n: int) -> dict:
+    out = {"coils": COILS, "iters": ITERS}
+    for accel, margin in ((2, 0.5), (4, 0.7)):
+        x, smaps, mask, k = _problem(n, accel)
+        zf = mri.nrmse(mri.recon_zero_filled(k, smaps, mask), x)
+        cg = mri.nrmse(
+            mri.recon_cg_sense(k, smaps, mask, iters=ITERS), x
+        )
+        us = _median_us(
+            lambda: mri.recon_cg_sense(k, smaps, mask, iters=ITERS)
+        )
+        emit(f"mri/recon/{n}R{accel}", us / ITERS, f"nrmse={cg:.4f} zf={zf:.4f}")
+        out[f"R{accel}"] = {
+            "accel_realised": round(mri.acceleration(mask), 2),
+            "us_per_iter": round(us / ITERS, 2),
+            "nrmse_zero_filled": round(zf, 5),
+            "nrmse_cg": round(cg, 5),
+            "gate_margin": margin,
+            "cg_beats_zf": bool(cg < margin * zf),
+        }
+    return out
+
+
+def bench_moco(n: int) -> dict:
+    x, smaps, mask, _ = _problem(n, 2)
+    masks = mri.shot_masks(mask, 2)
+    shifts = np.array([[0.0, 0.0], [3.0, -2.0]], np.float32)
+    k = np.asarray(mri.moco_forward(x, smaps, masks, shifts))
+    blind = mri.nrmse(mri.recon_cg_sense(k, smaps, mask, iters=8), x)
+    moco = mri.nrmse(mri.recon_cg_moco(k, smaps, masks, shifts, iters=8), x)
+    us = _median_us(
+        lambda: mri.recon_cg_moco(k, smaps, masks, shifts, iters=8),
+        repeats=3,
+    )
+    emit(f"mri/moco/{n}", us / 8, f"moco={moco:.4f} blind={blind:.4f}")
+    return {
+        "shots": 2,
+        "us_per_iter": round(us / 8, 2),
+        "nrmse_motion_blind": round(blind, 5),
+        "nrmse_moco": round(moco, 5),
+        "moco_beats_blind": bool(moco < 0.5 * blind),
+    }
+
+
+def bench_plan_cache(n: int) -> dict:
+    """MEASURE-mode warm-up accounting: recon #1 tunes, recon #2 rides
+    the plan cache — zero sweeps, 100% resolve hits."""
+    x, smaps, mask, k = _problem(n, 2)
+    # a scratch cache_dir isolates this panel's wisdom from the process
+    # default, so the warm-up really does tune from cold
+    with tempfile.TemporaryDirectory() as scratch:
+        with xfft.config(mode="measure", cache_dir=scratch):
+            with obs.capture() as first:
+                mri.recon_cg_sense(k, smaps, mask, iters=ITERS)
+            with obs.capture() as second:
+                mri.recon_cg_sense(k, smaps, mask, iters=ITERS)
+    warm_sweeps = len(first.select("plan.measure"))
+    second_sweeps = len(second.select("plan.measure"))
+    outcomes = [e["outcome"] for e in second.select("plan.resolve")]
+    hits = outcomes.count("hit")
+    emit(f"mri/plan_cache/{n}", 0.0,
+         f"warm_sweeps={warm_sweeps} second_sweeps={second_sweeps}")
+    return {
+        "warmup_measure_sweeps": warm_sweeps,
+        "second_recon_measure_sweeps": second_sweeps,
+        "second_recon_resolutions": len(outcomes),
+        "second_recon_hits": hits,
+        "hit_rate": round(hits / max(len(outcomes), 1), 3),
+    }
+
+
+def run() -> None:
+    """benchmarks.run entry point: small sweep, report to BENCH_mri.json."""
+    main(["--size", "64", "--out", "/tmp/BENCH_mri.json"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--size", type=int, default=64,
+                    help="frame size N (pow2; problems are NxN)")
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    args = ap.parse_args(argv)
+    n = args.size
+    report = {
+        "backend": jax.default_backend(),
+        "size": n,
+        "recon": bench_recon(n),
+        "moco": bench_moco(n),
+        "plan_cache": bench_plan_cache(n),
+    }
+    # The gates that make "ok" meaningful: CG beats zero-filled at both
+    # accelerations, motion modelling beats motion blindness, and the
+    # second recon of a warm key re-decides nothing.
+    report["ok"] = bool(
+        report["recon"]["R2"]["cg_beats_zf"]
+        and report["recon"]["R4"]["cg_beats_zf"]
+        and report["moco"]["moco_beats_blind"]
+        and report["plan_cache"]["warmup_measure_sweeps"] > 0
+        and report["plan_cache"]["second_recon_measure_sweeps"] == 0
+        and report["plan_cache"]["hit_rate"] == 1.0
+    )
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

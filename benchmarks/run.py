@@ -10,10 +10,11 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import accuracy, fft_bench, imaging_bench, obs_bench
-from benchmarks import pencil_overlap, plan_autotune, resilience_bench
-from benchmarks import serve_bench, table1_resources, table2_resources
-from benchmarks import table5_utilization, table6_delay, throughput
+from benchmarks import accuracy, fft_bench, imaging_bench, mri_bench
+from benchmarks import obs_bench, pencil_overlap, plan_autotune
+from benchmarks import resilience_bench, serve_bench, table1_resources
+from benchmarks import table2_resources, table5_utilization, table6_delay
+from benchmarks import throughput
 
 ALL = {
     "table1": table1_resources.run,
@@ -26,6 +27,7 @@ ALL = {
     "plan_autotune": plan_autotune.run,
     "fft": fft_bench.run,
     "imaging": imaging_bench.run,
+    "mri": mri_bench.run,
     "obs": obs_bench.run,
     "resilience": resilience_bench.run,
     "serve": serve_bench.run,

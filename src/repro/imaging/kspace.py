@@ -53,7 +53,11 @@ def kspace_to_image(
 ) -> jax.Array:
     """Centered k-space -> image over ``axes`` (exact inverse of
     :func:`image_to_kspace` under the same ``norm``)."""
-    kspace = jnp.asarray(kspace).astype(jnp.complex64)
+    kspace = jnp.asarray(kspace)
+    if not jnp.issubdtype(kspace.dtype, jnp.complexfloating):
+        # real input upcasts; complex128 (a double-precision scope under
+        # enable_x64) must NOT be silently downcast to complex64
+        kspace = kspace.astype(jnp.complex64)
     shifted = xfft.ifftshift(kspace, axes=axes)
     image = xfft.ifft2(shifted, axes=axes, norm=norm)
     return xfft.fftshift(image, axes=axes)

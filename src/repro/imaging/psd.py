@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 import repro.xfft as xfft
 from repro.core.spectral import _is_real
+from repro.imaging.registration import hermitian_full
 
 # The ONE argument contract: axis canonicalization (bounds-checked, named
 # errors), norm validation and post-engine scaling all come from the xfft
@@ -85,6 +86,41 @@ def smooth_spectrum(x: jax.Array) -> jax.Array:
     return shat.at[..., 0, 0].set(0.0)                # smooth has zero mean
 
 
+def _smooth_spectrum_half(x: jax.Array) -> jax.Array:
+    """Half-width smooth spectrum ``shat[..., :, :W/2+1]`` of a REAL frame.
+
+    The two-for-one route of :func:`smooth_spectrum`: real border
+    differences take ``rfft`` (half the border-pass arithmetic), the
+    row-axis half is Hermitian-extended in-place (1D flip+conj, no
+    transform), and the Poisson division only ever runs on the half the
+    real 2D path actually consumes.
+    """
+    x = jnp.asarray(x)
+    h, w = x.shape[-2], x.shape[-1]
+    wh = w // 2 + 1
+    b1 = x[..., -1, :] - x[..., 0, :]                 # (..., W) real
+    b2 = x[..., :, -1] - x[..., :, 0]                 # (..., H) real
+    bhat1 = xfft.rfft(b1)                             # (..., W/2+1)
+    bhat2h = xfft.rfft(b2)                            # (..., H/2+1)
+    # full-length row spectrum by Hermitian symmetry: B2[q] = conj(B2[H-q])
+    tail = jnp.conj(jnp.flip(bhat2h[..., 1:h - h // 2], axis=-1))
+    bhat2 = jnp.concatenate([bhat2h, tail], axis=-1)  # (..., H)
+    cdt = bhat1.dtype
+    q = jnp.arange(h, dtype=jnp.float32)
+    r = jnp.arange(wh, dtype=jnp.float32)
+    fq = 1.0 - jnp.exp(2j * math.pi * q / h).astype(cdt)
+    fr = 1.0 - jnp.exp(2j * math.pi * r / w).astype(cdt)
+    vhat = bhat1[..., None, :wh] * fq[:, None] + bhat2[..., :, None] * fr[None, :]
+    denom = (
+        2.0 * jnp.cos(2.0 * math.pi * q / h)[:, None]
+        + 2.0 * jnp.cos(2.0 * math.pi * r / w)[None, :]
+        - 4.0
+    )
+    denom = denom.at[0, 0].set(1.0)
+    shat = vhat / denom.astype(cdt)
+    return shat.at[..., 0, 0].set(0.0)
+
+
 def psd_decompose(
     x: jax.Array, axes: Tuple[int, int] = (-2, -1)
 ) -> Tuple[jax.Array, jax.Array]:
@@ -95,10 +131,13 @@ def psd_decompose(
     harmonic border-mismatch image. Leading axes are batched.
     """
     x, canon, moved = _to_last_two(x, axes, "psd_decompose")
-    shat = smooth_spectrum(x)
-    smooth = xfft.ifft2(shat)
     if _is_real(x):
-        smooth = jnp.real(smooth).astype(x.dtype)
+        # two-for-one: the smooth component of a real frame is real, so
+        # its spectrum is Hermitian — one irfft2 of the half-spectrum
+        # replaces the complex ifft2 + real projection
+        smooth = xfft.irfft2(_smooth_spectrum_half(x)).astype(x.dtype)
+    else:
+        smooth = xfft.ifft2(smooth_spectrum(x))
     periodic = x - smooth
     if moved:
         periodic = jnp.moveaxis(periodic, (-2, -1), canon)
@@ -115,10 +154,17 @@ def fft2_psd(
     the in-spectrum smooth solve, i.e. Mahmood et al.'s simultaneous
     edge-artifact removal. Same shape, layout and ``norm`` conventions as
     :func:`repro.xfft.fft2`; one extra pair of 1D border FFTs is the whole
-    overhead."""
+    overhead. Real frames take the two-for-one route throughout —
+    ``rfft2`` plus the half-width smooth solve — and the Hermitian
+    half-spectrum is expanded to full width only here, where the full
+    PSD is the return contract."""
     norm = _check_norm(norm)
     x, canon, moved = _to_last_two(x, axes, "fft2_psd")
     h, w = x.shape[-2], x.shape[-1]
-    shat = _scale(smooth_spectrum(x), norm, h * w, forward=True)
-    phat = xfft.fft2(x, norm=norm) - shat
+    if _is_real(x):
+        shat_h = _scale(_smooth_spectrum_half(x), norm, h * w, forward=True)
+        phat = hermitian_full(xfft.rfft2(x, norm=norm) - shat_h, w)
+    else:
+        shat = _scale(smooth_spectrum(x), norm, h * w, forward=True)
+        phat = xfft.fft2(x, norm=norm) - shat
     return jnp.moveaxis(phat, (-2, -1), canon) if moved else phat

@@ -31,15 +31,23 @@ import jax.numpy as jnp
 import repro.xfft as xfft
 from repro.core.spectral import _is_real
 
-__all__ = ["register_phase_correlation", "apply_shift"]
+__all__ = [
+    "register_phase_correlation",
+    "register_logpolar",
+    "apply_shift",
+    "hermitian_full",
+]
 
 
-def _hermitian_full(rh: jax.Array, w: int) -> jax.Array:
-    """Full-width cross-power spectrum from its (..., H, W/2+1) half.
+def hermitian_full(rh: jax.Array, w: int) -> jax.Array:
+    """Full-width spectrum from its Hermitian (..., H, W/2+1) half.
 
-    Real frames give Hermitian R: ``R[q, r] = conj(R[−q mod H, W−r])``,
+    A real frame's spectrum satisfies ``R[q, r] = conj(R[−q mod H, W−r])``,
     so the missing columns are a conjugated, double-flipped copy of
-    columns ``1 .. W/2−1`` — no second (complex) transform needed.
+    columns ``1 .. W/2−1`` — no second (complex) transform needed. Used
+    here to rebuild the full cross-power spectrum for subpixel
+    refinement, and by :func:`repro.imaging.psd.fft2_psd` to return the
+    full PSD off the two-for-one real path.
     """
     tail = jnp.conj(rh[..., :, 1:w - w // 2])        # cols 1 .. W/2-1
     tail = jnp.flip(tail, axis=-1)                   # -> cols W-1 .. W/2+1 order
@@ -115,8 +123,81 @@ def register_phase_correlation(
     )
     if upsample_factor <= 1:
         return coarse
-    r_full = _hermitian_full(r, w) if real else r
+    r_full = hermitian_full(r, w) if real else r
     return _upsampled_peak(r_full, coarse, int(upsample_factor))
+
+
+def _logpolar_resample(mag: jax.Array) -> jax.Array:
+    """Resample a centred (H, W) magnitude spectrum onto a log-polar grid.
+
+    Rows sweep θ over [0, π) (a real frame's magnitude spectrum is
+    point-symmetric, so the half-turn carries all the information and
+    the axis stays circular for phase correlation); columns sweep radius
+    log-uniformly from 1 to ``min(H, W)/2 − 1``. The output keeps the
+    (H, W) shape, so both axes stay pow2 for the planned transforms that
+    phase correlation runs next.
+    """
+    from jax.scipy.ndimage import map_coordinates
+
+    h, w = mag.shape[-2], mag.shape[-1]
+    n_theta, n_r = h, w
+    rmax = min(h, w) / 2.0 - 1.0
+    theta = jnp.arange(n_theta, dtype=jnp.float32) * (math.pi / n_theta)
+    logr = jnp.exp(
+        jnp.arange(n_r, dtype=jnp.float32) * (math.log(rmax) / (n_r - 1))
+    )
+    rows = h / 2.0 + logr[None, :] * jnp.sin(theta)[:, None]
+    cols = w / 2.0 + logr[None, :] * jnp.cos(theta)[:, None]
+    return map_coordinates(mag, [rows, cols], order=1, mode="constant")
+
+
+def register_logpolar(
+    ref: jax.Array, mov: jax.Array, upsample_factor: int = 10
+):
+    """Estimate the rotation + scale of ``mov`` relative to ``ref``.
+
+    The Fourier-Mellin trick on the existing machinery: a rotation of
+    the frame rotates its spectrum magnitude, an isotropic scale by
+    ``s`` scales it by ``1/s`` — and on a log-polar resampling of the
+    magnitude both become pure *translations* (rotation along θ, log-
+    scale along log-r), which :func:`register_phase_correlation`
+    already recovers to subpixel precision. The magnitude comes from
+    :func:`repro.imaging.psd.fft2_psd` so the border cross artifact
+    (which would anchor a spurious zero-motion peak) never enters.
+
+    Returns ``(angle, scale)`` floats: ``mov`` looks like ``ref``
+    rotated by ``angle`` radians (counter-clockwise, y-up convention)
+    and magnified by ``scale`` about the centre; apply the inverse warp
+    ``(-angle, 1/scale)`` to register ``mov`` onto ``ref``. Translation
+    does not bias the estimate (magnitude spectra are shift-invariant)
+    — recover it afterwards with :func:`register_phase_correlation` on
+    the de-rotated frame. 2D frames only; the angle is recovered modulo
+    π (magnitude spectra cannot tell a half-turn apart).
+    """
+    # lazy import: psd imports hermitian_full from this module
+    from repro.imaging.psd import fft2_psd
+
+    ref = jnp.asarray(ref)
+    mov = jnp.asarray(mov)
+    if ref.ndim != 2 or mov.ndim != 2:
+        raise ValueError(
+            f"register_logpolar takes single (H, W) frames, got "
+            f"{ref.shape} and {mov.shape}"
+        )
+    if ref.shape != mov.shape:
+        raise ValueError(
+            f"ref and mov must share a shape, got {ref.shape} vs {mov.shape}"
+        )
+    h, w = ref.shape
+    lp_ref = _logpolar_resample(jnp.log1p(jnp.abs(xfft.fftshift2(fft2_psd(ref)))))
+    lp_mov = _logpolar_resample(jnp.log1p(jnp.abs(xfft.fftshift2(fft2_psd(mov)))))
+    d_theta, d_logr = register_phase_correlation(
+        lp_ref, lp_mov, upsample_factor=upsample_factor
+    )
+    rmax = min(h, w) / 2.0 - 1.0
+    angle = float(d_theta) * (math.pi / h)
+    scale = math.exp(float(d_logr) * (math.log(rmax) / (w - 1)))
+    return angle, scale
 
 
 def apply_shift(x: jax.Array, shift) -> jax.Array:

@@ -1,0 +1,82 @@
+"""repro.mri — multi-coil MRI reconstruction on the planned FFT stack.
+
+The source paper's headline application for area-efficient 2D FFT
+hardware is medical image processing; this package is that workload,
+end to end: the SENSE encoding operators, reproducible Cartesian
+undersampling, ESPIRiT-lite sensitivity estimation, iterative CG-SENSE
+reconstruction, and Batchelor's motion-compensated forward model built
+from the PR-4 registration machinery.
+
+Everything transforms through ``repro.xfft`` → ``repro.plan`` — a CG
+recon's inner loop is tens of planned centered transforms over two
+problem keys, which makes reconstruction the hardest plan-cache,
+calibration-ledger and serve-lane stress test in the repo (serving
+lives in :class:`repro.serve.ImagingService`'s ``recon`` lane family).
+
+* :mod:`repro.mri.operators` — ``sense_forward`` / ``sense_adjoint``
+  (a true adjoint pair under the ortho centered transform),
+  ``apply_mask``, root-sum-of-squares ``rss_combine``; coil/frame axes
+  batch through one planned transform.
+* :mod:`repro.mri.masks` — seeded ``uniform_mask`` /
+  ``variable_density_mask`` (fully-sampled calibration block),
+  realised ``acceleration``, and ``estimate_sensitivities``
+  (ESPIRiT-lite: windowed calibration ifft + RSS normalisation).
+* :mod:`repro.mri.recon` — ``recon_cg_sense`` (CG on the normal
+  equations, optional Tikhonov ``lam``, per-iteration ``mri.cg.iter``
+  residual events), the ``recon_zero_filled`` baseline, the shared
+  ``cg_normal`` driver, and the ``nrmse`` gate metric.
+* :mod:`repro.mri.moco` — ``moco_forward`` / ``moco_adjoint``
+  (per-shot masks × per-shot ``apply_shift``), ``recon_cg_moco``, shot
+  partitioning and registration-based ``estimate_shot_shifts``.
+* :mod:`repro.mri.phantom` — the deterministic Shepp-Logan +
+  birdcage-coil fixture shared by tests, benchmarks and examples.
+"""
+
+from repro.mri.masks import (
+    acceleration,
+    estimate_sensitivities,
+    uniform_mask,
+    variable_density_mask,
+)
+from repro.mri.moco import (
+    estimate_shot_shifts,
+    moco_adjoint,
+    moco_forward,
+    recon_cg_moco,
+    shot_masks,
+)
+from repro.mri.operators import (
+    apply_mask,
+    rss_combine,
+    sense_adjoint,
+    sense_forward,
+)
+from repro.mri.phantom import birdcage_maps, shepp_logan
+from repro.mri.recon import (
+    cg_normal,
+    nrmse,
+    recon_cg_sense,
+    recon_zero_filled,
+)
+
+__all__ = [
+    "acceleration",
+    "apply_mask",
+    "birdcage_maps",
+    "cg_normal",
+    "estimate_sensitivities",
+    "estimate_shot_shifts",
+    "moco_adjoint",
+    "moco_forward",
+    "nrmse",
+    "recon_cg_moco",
+    "recon_cg_sense",
+    "recon_zero_filled",
+    "rss_combine",
+    "sense_adjoint",
+    "sense_forward",
+    "shepp_logan",
+    "shot_masks",
+    "uniform_mask",
+    "variable_density_mask",
+]

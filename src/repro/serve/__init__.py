@@ -12,6 +12,7 @@ from repro.serve.engine import Request, ServeEngine, SpectrumRequest, SpectrumSe
 from repro.serve.imaging import (
     ConvolutionRequest,
     ImagingService,
+    ReconRequest,
     RegistrationRequest,
 )
 from repro.serve.loop import ServeLoop
@@ -23,6 +24,7 @@ __all__ = [
     "ConvolutionRequest",
     "ImagingService",
     "LaneKey",
+    "ReconRequest",
     "RegistrationRequest",
     "Request",
     "ServeEngine",

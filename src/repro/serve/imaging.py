@@ -13,9 +13,14 @@ all on the shared :class:`repro.serve.loop.ServeLoop`.
   realness): the lane shares one ``oaconv2d`` plan — i.e. one
   overlap-save tile — and the per-request kernels ride the batched
   leading axis of :func:`repro.imaging.tiled.oaconvolve2`;
+* reconstruction requests (:class:`ReconRequest`) lane by (frame
+  shape, coil count, acceleration, CG iterations, Tikhonov weight,
+  precision): the lane stacks every member's k-space/maps/mask and
+  runs ONE batched CG-SENSE solve — tens of planned centered
+  transforms over two problem keys, all coalesced under one plan;
 * plain :class:`SpectrumRequest` frames still work; a mixed queue is
   partitioned into lanes and each family served by its own executor —
-  and under the streaming entry (``svc.loop.submit``) the three
+  and under the streaming entry (``svc.loop.submit``) the four
   families coalesce and round-robin through ONE scheduler.
 
 Like the parent, the service honours scoped :func:`repro.xfft.config`
@@ -34,7 +39,12 @@ from repro.resilience.policies import execute_with_policy
 from repro.serve.engine import SpectrumRequest, SpectrumService
 from repro.serve.loop import LaneKey
 
-__all__ = ["RegistrationRequest", "ConvolutionRequest", "ImagingService"]
+__all__ = [
+    "RegistrationRequest",
+    "ConvolutionRequest",
+    "ReconRequest",
+    "ImagingService",
+]
 
 
 @dataclasses.dataclass
@@ -59,10 +69,24 @@ class ConvolutionRequest:
     done: bool = False
 
 
-class ImagingService(SpectrumService):
-    """Plan-aware batched serving for spectra, registration and convolution.
+@dataclasses.dataclass
+class ReconRequest:
+    """CG-SENSE reconstruct undersampled multi-coil k-space to an image."""
 
-    One loop, three request families: classification is the only
+    kspace: np.ndarray                      # (C, H, W) complex, centered
+    smaps: np.ndarray                       # (C, H, W) coil sensitivities
+    mask: np.ndarray                        # (H, W) sampling mask
+    iters: int = 10                         # CG iterations
+    lam: float = 0.0                        # Tikhonov weight
+    image: np.ndarray | None = None         # filled by serve: (H, W) complex
+    done: bool = False
+
+
+class ImagingService(SpectrumService):
+    """Plan-aware batched serving for spectra, registration, convolution
+    and MRI reconstruction.
+
+    One loop, four request families: classification is the only
     family-specific intake code, so validation stays all-or-nothing (a
     bad request anywhere in a call fails the call before any lane runs)
     and admission control sheds the FULL mixed queue before any family
@@ -109,9 +133,43 @@ class ImagingService(SpectrumService):
             return LaneKey(
                 "convolution", (image.shape, kernel.shape, r.mode, real)
             )
+        if isinstance(r, ReconRequest):
+            from repro.mri import acceleration
+            from repro.xfft import get_config
+
+            kspace = np.asarray(r.kspace)
+            smaps = np.asarray(r.smaps)
+            mask = np.asarray(r.mask)
+            if kspace.ndim != 3 or kspace.shape != smaps.shape:
+                raise ValueError(
+                    f"kspace and smaps must be matching (C, H, W) stacks, "
+                    f"got {kspace.shape} vs {smaps.shape}"
+                )
+            if mask.shape != kspace.shape[-2:]:
+                raise ValueError(
+                    f"mask {mask.shape} does not match the "
+                    f"k-space frame {kspace.shape[-2:]}"
+                )
+            if r.iters < 1:
+                raise ValueError(f"iters must be >= 1, got {r.iters}")
+            if r.lam < 0.0:
+                raise ValueError(f"lam must be >= 0, got {r.lam}")
+            # Lane on the CG problem geometry: requests that share it run
+            # as ONE batched solve (per-item masks/maps ride the leading
+            # axis; cg_normal takes per-item step sizes). Acceleration is
+            # part of the key so lightly and heavily undersampled solves
+            # don't share a convergence budget; precision is part of it
+            # because a scoped config(precision="double") changes the
+            # plan the lane must warm.
+            accel = int(round(acceleration(mask)))
+            return LaneKey(
+                "recon",
+                (kspace.shape[-2:], kspace.shape[0], accel,
+                 int(r.iters), float(r.lam), get_config().precision),
+            )
         raise TypeError(
-            f"expected SpectrumRequest, "
-            f"RegistrationRequest or ConvolutionRequest, got {type(r)!r}"
+            f"expected SpectrumRequest, RegistrationRequest, "
+            f"ConvolutionRequest or ReconRequest, got {type(r)!r}"
         )
 
     def _queue_fields(self, requests, lanes) -> dict:
@@ -120,6 +178,7 @@ class ImagingService(SpectrumService):
             "spectra": families.count("spectrum"),
             "registrations": families.count("registration"),
             "convolutions": families.count("convolution"),
+            "recons": families.count("recon"),
         }
 
     def _execute_lane(self, lane: LaneKey, members: list) -> None:
@@ -127,6 +186,8 @@ class ImagingService(SpectrumService):
             self._execute_registrations(lane, members)
         elif lane.family == "convolution":
             self._execute_convolutions(lane, members)
+        elif lane.family == "recon":
+            self._execute_recons(lane, members)
         else:
             self._execute_spectra(lane, members)
 
@@ -186,4 +247,33 @@ class ImagingService(SpectrumService):
             ))
         for r, res in zip(members, out):
             r.out = res
+            r.done = True
+
+    def _execute_recons(self, lane: LaneKey, members: list) -> None:
+        from repro.mri import recon_cg_sense
+
+        shape, coils, accel, iters, lam, _precision = lane.signature
+        # Warm the plan for the BATCHED coil stack every CG iteration
+        # transforms ((B, C, H, W) forward + inverse — xfft keys on the
+        # full shape), so the whole 2·iters-transform solve below runs on
+        # plan-cache hits: one lane, one plan, tens of resolutions.
+        self._plan_for("fft2d", (len(members), coils, *shape), "complex64")
+        kspaces = jnp.asarray(np.stack([np.asarray(r.kspace) for r in members]))
+        smapss = jnp.asarray(np.stack([np.asarray(r.smaps) for r in members]))
+        masks = jnp.asarray(
+            np.stack([np.asarray(r.mask) for r in members]).astype(np.float32)
+        )[:, None]                           # (B, 1, H, W): broadcast coils
+        with obs.span(
+            "serve.batch", service="recon", shape=shape, coils=coils,
+            accel=accel, batch=len(members), iters=iters,
+        ):
+            out = np.asarray(execute_with_policy(
+                self.policy,
+                lambda: recon_cg_sense(
+                    kspaces, smapss, mask=masks, iters=iters, lam=lam
+                ),
+                service="recon",
+            ))
+        for r, img in zip(members, out):
+            r.image = img
             r.done = True

@@ -48,10 +48,17 @@ def frame(rng):
 
 
 def test_psd_resolves_through_plan(plan_calls, frame):
+    # real frames ride the two-for-one route end to end: rfft borders,
+    # rfft2/irfft2 body — no full complex transform anywhere
     psd_decompose(frame)
-    assert "fft1d" in plan_calls and "fft2d" in plan_calls  # borders + inverse
+    assert "rfft1d" in plan_calls and "rfft2d" in plan_calls
+    assert "fft1d" not in plan_calls and "fft2d" not in plan_calls
     plan_calls.clear()
     fft2_psd(frame)
+    assert plan_calls.count("rfft1d") == 2 and "rfft2d" in plan_calls
+    assert "fft2d" not in plan_calls
+    plan_calls.clear()
+    fft2_psd(frame.astype(np.complex64))     # complex path unchanged
     assert plan_calls.count("fft1d") == 2 and "fft2d" in plan_calls
 
 

@@ -99,6 +99,27 @@ def test_fft2_psd_norm_conventions(natural_image):
         fft2_psd(natural_image, norm="unitary")
 
 
+def test_real_path_matches_complex_path(natural_image):
+    """The two-for-one real route (rfft borders + rfft2 body + Hermitian
+    expansion) must agree with the complex route under every norm."""
+    for norm in (None, "ortho", "forward"):
+        got = np.asarray(fft2_psd(natural_image, norm=norm))
+        want = np.asarray(
+            fft2_psd(natural_image.astype(np.complex64), norm=norm)
+        )
+        np.testing.assert_allclose(got, want, atol=1e-4 * np.abs(want).max())
+
+
+def test_real_decompose_matches_complex_and_stays_real(natural_image):
+    p_r, s_r = (np.asarray(a) for a in psd_decompose(natural_image))
+    assert p_r.dtype == np.float32 and s_r.dtype == np.float32
+    p_c, s_c = (
+        np.asarray(a) for a in psd_decompose(natural_image.astype(np.complex64))
+    )
+    np.testing.assert_allclose(p_r, p_c.real, atol=1e-4)
+    np.testing.assert_allclose(s_r, s_c.real, atol=1e-4)
+
+
 def test_complex_input_supported(rng):
     z = (rng.standard_normal((32, 32)) + 1j * rng.standard_normal((32, 32))).astype(
         np.complex64

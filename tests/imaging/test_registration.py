@@ -1,5 +1,8 @@
 """Phase-correlation registration: whole-pixel recovery (incl. wraps and
-odd shifts), subpixel refinement, batching, and the shift operator."""
+odd shifts), subpixel refinement, batching, the shift operator, and the
+log-polar (Fourier-Mellin) rotation+scale estimator."""
+
+import math
 
 import numpy as np
 import pytest
@@ -7,6 +10,24 @@ import pytest
 from _helpers import smooth_image
 
 from repro.imaging import apply_shift, register_phase_correlation
+from repro.imaging.registration import register_logpolar
+
+
+def rotate_scale(img: np.ndarray, angle: float, scale: float) -> np.ndarray:
+    """Warp ``img`` so the output looks like ``img`` rotated by ``angle``
+    (counter-clockwise, y-up) and magnified by ``scale`` about the
+    centre — the convention register_logpolar reports."""
+    from jax.scipy.ndimage import map_coordinates
+
+    h, w = img.shape
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float64)
+    dy, dx = yy - h / 2, xx - w / 2
+    ca, sa = math.cos(angle), math.sin(angle)
+    src_c = (ca * dx - sa * dy) / scale + w / 2        # inverse mapping
+    src_r = (sa * dx + ca * dy) / scale + h / 2
+    return np.asarray(
+        map_coordinates(img, [src_r, src_c], order=1, mode="constant")
+    )
 
 
 @pytest.mark.parametrize("shift", [(0, 0), (5, 9), (-7, 3), (31, -17), (1, -1)])
@@ -88,3 +109,39 @@ def test_shape_mismatch_rejected():
         register_phase_correlation(np.zeros((8, 8)), np.zeros((8, 16)))
     with pytest.raises(ValueError, match="dy, dx"):
         apply_shift(np.zeros((8, 8), np.float32), (1.0, 2.0, 3.0))
+
+
+@pytest.mark.parametrize(
+    "angle,scale",
+    [(0.2, 1.0), (-0.2, 1.0), (0.0, 1.1), (0.0, 0.9), (0.3, 1.15)],
+)
+def test_logpolar_recovers_rotation_and_scale(angle, scale):
+    ref = smooth_image(128, seed=3, bandwidth=0.1)
+    mov = rotate_scale(ref, angle, scale)
+    got_angle, got_scale = register_logpolar(ref, mov)
+    assert got_angle == pytest.approx(angle, abs=0.02)
+    assert got_scale == pytest.approx(scale, rel=0.02)
+
+
+def test_logpolar_ignores_translation():
+    """Magnitude spectra are shift-invariant: a translated+rotated frame
+    reports the same rotation as the untranslated one."""
+    ref = smooth_image(128, seed=4, bandwidth=0.1)
+    mov = np.asarray(apply_shift(rotate_scale(ref, 0.25, 1.0), (9.0, -5.0)))
+    got_angle, got_scale = register_logpolar(ref, mov)
+    assert got_angle == pytest.approx(0.25, abs=0.03)
+    assert got_scale == pytest.approx(1.0, rel=0.02)
+
+
+def test_logpolar_identity_is_zero_motion():
+    ref = smooth_image(64, seed=5, bandwidth=0.15)
+    angle, scale = register_logpolar(ref, ref.copy())
+    assert angle == pytest.approx(0.0, abs=1e-3)
+    assert scale == pytest.approx(1.0, rel=1e-3)
+
+
+def test_logpolar_input_contract():
+    with pytest.raises(ValueError, match="single"):
+        register_logpolar(np.zeros((2, 8, 8)), np.zeros((2, 8, 8)))
+    with pytest.raises(ValueError, match="share a shape"):
+        register_logpolar(np.zeros((8, 8)), np.zeros((16, 16)))

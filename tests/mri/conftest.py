@@ -1,0 +1,30 @@
+"""Shared MRI fixtures: one deterministic phantom + birdcage coil set.
+
+Everything downstream (operators, masks, recon, moco, serving, the
+benchmark and the example) is a function of these two arrays, so the
+whole suite is bit-reproducible run to run.
+"""
+
+import numpy as np
+import pytest
+
+from repro import mri
+
+N = 64
+COILS = 4
+
+
+@pytest.fixture(scope="session")
+def phantom():
+    return np.asarray(mri.shepp_logan(N))
+
+
+@pytest.fixture(scope="session")
+def smaps():
+    return np.asarray(mri.birdcage_maps(COILS, N))
+
+
+@pytest.fixture
+def kspace_full(phantom, smaps):
+    """Fully sampled multi-coil k-space of the phantom."""
+    return np.asarray(mri.sense_forward(phantom, smaps))

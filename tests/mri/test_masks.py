@@ -1,0 +1,76 @@
+"""Sampling-mask fixtures: reproducibility, calibration contract,
+realised acceleration, and the ESPIRiT-lite map estimate."""
+
+import numpy as np
+import pytest
+
+from repro import mri
+
+
+def test_uniform_mask_pattern():
+    m = np.asarray(mri.uniform_mask((64, 48), 4, calib=8))
+    assert m.shape == (64, 48) and m.dtype == np.float32
+    # rows are kept whole (Cartesian phase-encode undersampling)
+    rows = (m != 0).any(axis=1)
+    np.testing.assert_array_equal(m[rows], 1.0)
+    assert rows[::4].all()                        # every 4th row kept
+    assert rows[28:36].all()                      # centred calib block
+    assert not rows[1] and not rows[2]
+
+
+def test_variable_density_reproducible():
+    a = mri.variable_density_mask((64, 64), 4, seed=7)
+    b = mri.variable_density_mask((64, 64), 4, seed=7)
+    np.testing.assert_array_equal(a, b)
+    c = mri.variable_density_mask((64, 64), 4, seed=8)
+    assert (a != c).any()
+
+
+def test_variable_density_centre_heavy():
+    m = np.asarray(mri.variable_density_mask((128, 64), 4, calib=0, seed=0))
+    rows = (m != 0).any(axis=1)
+    centre = rows[32:96].mean()
+    edges = np.concatenate([rows[:32], rows[96:]]).mean()
+    assert centre > edges
+
+
+def test_calibration_block_always_sampled():
+    m = np.asarray(mri.variable_density_mask((64, 64), 8, calib=12, seed=3))
+    assert (m[26:38] == 1.0).all()
+
+
+def test_acceleration_accounting():
+    m = mri.uniform_mask((64, 64), 4, calib=0)
+    assert mri.acceleration(m) == pytest.approx(4.0)
+    with pytest.raises(ValueError, match="no samples"):
+        mri.acceleration(np.zeros((8, 8)))
+
+
+def test_mask_validation():
+    with pytest.raises(ValueError, match="shape"):
+        mri.uniform_mask((64,), 2)
+    with pytest.raises(ValueError, match="acceleration"):
+        mri.uniform_mask((64, 64), 0)
+    with pytest.raises(ValueError, match="calibration"):
+        mri.uniform_mask((64, 64), 2, calib=100)
+
+
+def test_estimated_maps_close_to_truth(phantom, smaps, kspace_full):
+    """On the smooth birdcage truth the windowed-calibration estimate is
+    accurate wherever the object has signal."""
+    est = np.asarray(mri.estimate_sensitivities(kspace_full, calib=24))
+    assert est.shape == smaps.shape
+    support = phantom > 0.1
+    err = np.abs(est - smaps)[:, support]
+    assert err.mean() < 0.06, err.mean()
+    # RSS-normalised on the object, like the truth
+    rss = np.asarray(mri.rss_combine(est))
+    np.testing.assert_allclose(rss[support], 1.0, atol=0.05)
+
+
+def test_estimate_rejects_unsampled_calibration(kspace_full):
+    bad = np.asarray(mri.uniform_mask((64, 64), 4, calib=0))
+    with pytest.raises(ValueError, match="calibration block"):
+        mri.estimate_sensitivities(kspace_full, calib=16, mask=bad)
+    ok = mri.uniform_mask((64, 64), 4, calib=16)
+    mri.estimate_sensitivities(kspace_full, calib=16, mask=ok)

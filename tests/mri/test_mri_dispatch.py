@@ -1,0 +1,94 @@
+"""The ISSUE 10 acceptance gate: every repro.mri transform resolves
+through repro.plan (spy on resolve_call; forced dispatch reroutes the
+transforms INSIDE the operators), with zero private engine calls and a
+DeprecationWarning-free surface."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.xfft as xfft
+import repro.xfft._transforms as _transforms
+from repro import mri
+from repro.plan.api import resolve_call as _real_resolve_call
+
+
+@pytest.fixture
+def plan_calls(monkeypatch):
+    """Record every planner resolution made by the xfft front door;
+    error on any DeprecationWarning (legacy shims would emit one)."""
+    calls = []
+
+    def spy(kind, shape, *args, **kwargs):
+        calls.append(kind)
+        return _real_resolve_call(kind, shape, *args, **kwargs)
+
+    monkeypatch.setattr(_transforms, "resolve_call", spy)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        yield calls
+
+
+def test_sense_operators_resolve_through_plan(plan_calls, phantom, smaps):
+    mask = mri.uniform_mask((64, 64), 2)
+    k = mri.sense_forward(phantom, smaps, mask)
+    assert plan_calls == ["fft2d"]               # one batched coil transform
+    mri.sense_adjoint(k, smaps, mask)
+    assert plan_calls == ["fft2d", "fft2d"]
+
+
+def test_cg_sense_transform_accounting(plan_calls, phantom, smaps):
+    """A CG solve is EXACTLY 1 + 2·iters planned fft2d resolutions (the
+    Aᴴy seed, then forward+adjoint per iteration) — nothing bypasses the
+    planner, nothing transforms twice."""
+    mask = mri.uniform_mask((64, 64), 2)
+    k = mri.sense_forward(phantom, smaps, mask)
+    plan_calls.clear()
+    mri.recon_cg_sense(k, smaps, mask, iters=4)
+    assert plan_calls == ["fft2d"] * (1 + 2 * 4)
+
+
+def test_map_estimation_resolves_through_plan(plan_calls, kspace_full):
+    plan_calls.clear()                           # kspace fixture transformed too
+    mri.estimate_sensitivities(kspace_full, calib=16)
+    assert plan_calls == ["fft2d"]               # one low-res inverse
+
+
+def test_moco_resolves_through_plan(plan_calls, phantom, smaps):
+    mask = np.asarray(mri.uniform_mask((64, 64), 2))
+    masks = mri.shot_masks(mask, 2)
+    shifts = np.array([[0.0, 0.0], [2.0, -1.0]], np.float32)
+    k = mri.moco_forward(phantom, smaps, masks, shifts)
+    # apply_shift (complex: fft2d pair) + the SENSE forward transform
+    assert plan_calls == ["fft2d"] * 3 and "rfft2d" not in plan_calls
+    plan_calls.clear()
+    mri.estimate_shot_shifts(k, smaps, masks)
+    # shot adjoint (fft2d), then phase correlation on REAL navigators:
+    # the registration machinery keeps its two-for-one rfft2d path
+    assert plan_calls[0] == "fft2d"
+    assert plan_calls.count("rfft2d") == 3
+
+
+def test_forced_dispatch_reaches_mri_operators(phantom, smaps, monkeypatch):
+    """A scoped variant override must reroute the transforms INSIDE the
+    MRI operators — proof their FFTs go through resolve_call, not around
+    it (zero private engine calls)."""
+    import repro.kernels.ops as ops
+
+    kernel_calls = []
+    real_kernel = ops.fft2_kernel
+
+    def spy(x, **kw):
+        kernel_calls.append(np.asarray(x).shape)
+        return real_kernel(x, **kw)
+
+    monkeypatch.setattr(ops, "fft2_kernel", spy)
+    mask = mri.uniform_mask((64, 64), 2)
+    mri.sense_forward(phantom, smaps, mask)
+    assert kernel_calls == []                    # ESTIMATE on CPU: jnp engines
+    with xfft.config(variant="fused"):
+        mri.sense_forward(phantom, smaps, mask)
+    assert len(kernel_calls) == 1                # forced, exactly once, in scope
+    mri.sense_forward(phantom, smaps, mask)
+    assert len(kernel_calls) == 1                # nothing leaked past the scope

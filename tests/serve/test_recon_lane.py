@@ -1,0 +1,118 @@
+"""ImagingService recon lane: CG-SENSE requests coalesce into ONE
+batched solve under one plan per lane, and a repeat of a warm problem
+key re-decides nothing (zero MEASURE sweeps, all cache hits)."""
+
+import numpy as np
+import pytest
+
+from repro import mri, obs
+from repro.plan import PlanCache
+from repro.serve import ImagingService, ReconRequest, SpectrumRequest
+
+N = 32
+
+
+def _fixture(accel=2, n=N, coils=4, calib=8):
+    x = np.asarray(mri.shepp_logan(n))
+    smaps = np.asarray(mri.birdcage_maps(coils, n))
+    mask = np.asarray(mri.uniform_mask((n, n), accel, calib=calib))
+    k = np.asarray(mri.sense_forward(x, smaps, mask))
+    return x, smaps, mask, k
+
+
+def test_recon_lane_coalesces_into_one_batched_solve():
+    x, smaps, mask, k = _fixture()
+    svc = ImagingService()
+    reqs = [ReconRequest(kspace=k, smaps=smaps, mask=mask) for _ in range(3)]
+    with obs.capture() as trace:
+        svc.serve(reqs)
+    assert all(r.done for r in reqs)
+    zf = mri.nrmse(np.asarray(mri.recon_zero_filled(k, smaps, mask)), x)
+    for r in reqs:
+        assert r.image.shape == (N, N)
+        assert mri.nrmse(r.image, x) < 0.5 * zf
+    # the whole queue ran as ONE batched CG execution
+    batches = trace.select("serve.batch")
+    assert [(e["service"], e["batch"]) for e in batches] == [("recon", 3)]
+    # one plan, keyed on the batched coil-stack problem the CG transforms
+    assert len(svc.plans) == 1
+    (plan,) = svc.plans.values()
+    assert plan.key.kind == "fft2d" and plan.key.shape == (3, 4, N, N)
+
+
+def test_recon_result_matches_direct_call():
+    x, smaps, mask, k = _fixture()
+    req = ReconRequest(kspace=k, smaps=smaps, mask=mask, iters=6, lam=1e-3)
+    ImagingService().serve([req])
+    direct = np.asarray(
+        mri.recon_cg_sense(k, smaps, mask, iters=6, lam=1e-3)
+    )
+    np.testing.assert_allclose(req.image, direct, atol=1e-5)
+
+
+def test_recon_lanes_split_by_problem_geometry():
+    # calib rows push the realised (rounded) acceleration of a nominal
+    # R=4 mask down toward 2 — drop them so the lanes genuinely differ
+    _, smaps, mask2, k2 = _fixture(accel=2)
+    _, _, mask4, k4 = _fixture(accel=8, calib=0)
+    svc = ImagingService()
+    reqs = [
+        ReconRequest(kspace=k2, smaps=smaps, mask=mask2),
+        ReconRequest(kspace=k4, smaps=smaps, mask=mask4),   # different R
+        ReconRequest(kspace=k2, smaps=smaps, mask=mask2, iters=5),  # diff budget
+    ]
+    with obs.capture() as trace:
+        svc.serve(reqs)
+    assert all(r.done for r in reqs)
+    recon_batches = [
+        e for e in trace.select("serve.batch") if e["service"] == "recon"
+    ]
+    assert sorted(e["batch"] for e in recon_batches) == [1, 1, 1]
+    assert len({(e["accel"], e["iters"]) for e in recon_batches}) == 3
+
+
+def test_mixed_queue_recon_plus_spectrum(rng):
+    x, smaps, mask, k = _fixture()
+    recon = ReconRequest(kspace=k, smaps=smaps, mask=mask)
+    spec = SpectrumRequest(frame=rng.standard_normal((16, 16)).astype(np.float32))
+    ImagingService().serve([recon, spec])
+    assert recon.done and spec.done
+
+
+def test_second_serve_of_warm_key_re_decides_nothing():
+    """The acceptance gate: after a MEASURE warm-up, a repeat batch of
+    the same problem key performs ZERO measured sweeps — every planner
+    decision in the event stream is a cache hit."""
+    x, smaps, mask, k = _fixture()
+    svc = ImagingService(plan_mode="measure", cache=PlanCache())
+
+    def queue():
+        return [ReconRequest(kspace=k, smaps=smaps, mask=mask) for _ in range(2)]
+
+    svc.serve(queue())                           # tunes the lane's key(s)
+    with obs.capture() as trace:
+        svc.serve(queue())
+    assert trace.select("plan.measure") == []
+    resolves = trace.select("plan.resolve")
+    assert resolves and {e["outcome"] for e in resolves} == {"hit"}
+
+
+def test_recon_request_validation_is_all_or_nothing(rng):
+    _, smaps, mask, k = _fixture()
+    good = SpectrumRequest(frame=rng.standard_normal((8, 8)).astype(np.float32))
+    bad = ReconRequest(kspace=k, smaps=smaps[:2], mask=mask)
+    with pytest.raises(ValueError, match="matching"):
+        ImagingService().serve([good, bad])
+    assert not good.done and good.spectrum is None
+    with pytest.raises(ValueError, match="mask"):
+        ImagingService().serve(
+            [ReconRequest(kspace=k, smaps=smaps, mask=mask[:16])]
+        )
+    with pytest.raises(ValueError, match="iters"):
+        ImagingService().serve(
+            [ReconRequest(kspace=k, smaps=smaps, mask=mask, iters=0)]
+        )
+    with pytest.raises(ValueError, match="lam"):
+        ImagingService().serve(
+            [ReconRequest(kspace=k, smaps=smaps, mask=mask, lam=-0.1)]
+        )
